@@ -1,0 +1,50 @@
+"""Shared benchmark scaffolding.
+
+Every benchmark emits CSV rows ``name,us_per_call,derived`` where
+``us_per_call`` is the wall time spent computing that cell (planning or
+simulation cost — the planner latency IS the paper's Table 3 metric) and
+``derived`` is the reproduced quantity (throughput in samples/s, seconds,
+or a fraction).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Tuple
+
+from repro.configs import get_arch
+from repro.core import build_profile
+
+#: Paper Table 1: model, (global batch, varuna/oobleck microbatch,
+#: bamboo microbatch or None=X (OOM), seq len)
+TABLE1 = {
+    "bert_large": (8192, 32, 4, 512),
+    "gpt2": (8192, 32, 1, 1024),
+    "gpt3_medium": (8192, 16, None, 2048),
+    "gpt3_2_7b": (1024, 2, None, 2048),
+    "gpt3_6_7b": (1024, 2, None, 2048),
+}
+
+NUM_NODES = 30
+FAULT_TOLERANCE = 2
+FREQS = {"6h": 6 * 3600, "1h": 3600, "10m": 600}
+
+
+def profile_for(model: str, microbatch: int):
+    gb, mb, bmb, seq = TABLE1[model]
+    return build_profile(get_arch(model), microbatch=microbatch, seq_len=seq)
+
+
+class Csv:
+    def __init__(self):
+        self.rows: List[Tuple[str, float, str]] = []
+
+    def add(self, name: str, us_per_call: float, derived) -> None:
+        self.rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def timed(fn: Callable):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6

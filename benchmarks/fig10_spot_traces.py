@@ -1,0 +1,52 @@
+"""Paper Figure 10 / Appendix C: average throughput replaying
+spot-instance availability traces (EC2-like: preemption every ~7.7 min;
+GCP-like: ~10.3 min) for 12 simulated hours, with node joins."""
+from __future__ import annotations
+
+from benchmarks.common import (FAULT_TOLERANCE, NUM_NODES, TABLE1, Csv,
+                               profile_for, timed)
+from repro.sim import (BambooPolicy, OobleckPolicy, VarunaPolicy, run_sim,
+                       spot_trace)
+
+MODELS = ("bert_large", "gpt2", "gpt3_2_7b", "gpt3_6_7b")
+TRACES = {"ec2": 7.7 * 60, "gcp": 10.3 * 60}
+HORIZON = 12 * 3600.0
+MAX_STAGES = 12
+
+
+def main(csv: Csv | None = None) -> None:
+    csv = csv or Csv()
+    nodes = [f"n{i}" for i in range(NUM_NODES)]
+    for model in MODELS:
+        gb, mb, bamboo_mb, seq = TABLE1[model]
+        prof = profile_for(model, mb)
+        for tname, mean_preempt in TRACES.items():
+            trace = spot_trace(nodes, HORIZON, mean_preempt,
+                               mean_recover=mean_preempt * 2, seed=17,
+                               min_alive=max(10, NUM_NODES // 3))
+            mks = {
+                "oobleck": lambda: OobleckPolicy(
+                    prof, nodes, f=FAULT_TOLERANCE, global_batch=gb,
+                    microbatch=mb, max_stages=MAX_STAGES),
+                "varuna": lambda: VarunaPolicy(
+                    prof, nodes, global_batch=gb, microbatch=mb,
+                    max_stages=MAX_STAGES),
+                "bamboo": lambda: BambooPolicy(
+                    profile_for(model, bamboo_mb) if bamboo_mb else prof,
+                    nodes, global_batch=gb, microbatch=bamboo_mb or mb,
+                    max_stages=MAX_STAGES),
+            }
+            for pname, mk in mks.items():
+                def cell():
+                    if pname == "bamboo" and bamboo_mb is None:
+                        return "OOM"
+                    res = run_sim(mk(), trace, HORIZON, gb)
+                    if res.stopped_reason == "OOM":
+                        return "OOM"
+                    return f"{res.throughput:.2f}"
+                derived, us = timed(cell)
+                csv.add(f"fig10/{model}/{tname}/{pname}", us, derived)
+
+
+if __name__ == "__main__":
+    main()

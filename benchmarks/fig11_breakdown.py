@@ -1,0 +1,52 @@
+"""Paper Figure 11: wall-clock occupation breakdown (compute / fallback /
+downtime / checkpoint) for each framework at the 10-minute failure rate,
+BERT-Large and GPT-3 6.7b."""
+from __future__ import annotations
+
+from benchmarks.common import (FAULT_TOLERANCE, NUM_NODES, TABLE1, Csv,
+                               profile_for, timed)
+from repro.sim import (BambooPolicy, OobleckPolicy, VarunaPolicy,
+                       controlled_failures, run_sim)
+
+MODELS = ("bert_large", "gpt3_6_7b")
+MAX_STAGES = 12
+
+
+def main(csv: Csv | None = None) -> None:
+    csv = csv or Csv()
+    nodes = [f"n{i}" for i in range(NUM_NODES)]
+    interval = 600.0
+    for model in MODELS:
+        gb, mb, bamboo_mb, seq = TABLE1[model]
+        prof = profile_for(model, mb)
+        trace = controlled_failures(nodes, interval, stop_at=NUM_NODES // 2)
+        horizon = interval * (NUM_NODES // 2 + 2)
+        mks = {
+            "oobleck": lambda: OobleckPolicy(prof, nodes, f=FAULT_TOLERANCE,
+                                             global_batch=gb, microbatch=mb,
+                                             max_stages=MAX_STAGES),
+            "varuna": lambda: VarunaPolicy(prof, nodes, global_batch=gb,
+                                           microbatch=mb,
+                                           max_stages=MAX_STAGES),
+            "bamboo": lambda: BambooPolicy(
+                profile_for(model, bamboo_mb) if bamboo_mb else prof, nodes,
+                global_batch=gb, microbatch=bamboo_mb or mb,
+                max_stages=MAX_STAGES),
+        }
+        for pname, mk in mks.items():
+            def cell():
+                if pname == "bamboo" and bamboo_mb is None:
+                    return None
+                return run_sim(mk(), trace, horizon, gb,
+                               min_nodes=NUM_NODES // 2)
+            res, us = timed(cell)
+            if res is None or res.stopped_reason == "OOM":
+                csv.add(f"fig11/{model}/{pname}/oom", us, "1.00")
+                continue
+            total = max(sum(res.breakdown.values()), 1e-9)
+            for k, v in sorted(res.breakdown.items()):
+                csv.add(f"fig11/{model}/{pname}/{k}", us, f"{v / total:.3f}")
+
+
+if __name__ == "__main__":
+    main()

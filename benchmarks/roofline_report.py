@@ -1,0 +1,42 @@
+"""Roofline benchmark: reads the dry-run artifact (artifacts/dryrun.json,
+produced by ``python -m repro.launch.dryrun``) and reports the three
+roofline terms per (arch x shape x mesh).  Skips gracefully when the
+artifact has not been generated yet."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import Csv
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                        "dryrun.json")
+
+
+def main(csv: Csv | None = None) -> None:
+    csv = csv or Csv()
+    path = os.path.abspath(ARTIFACT)
+    if not os.path.exists(path):
+        csv.add("roofline/skipped", 0.0,
+                "run `PYTHONPATH=src python -m repro.launch.dryrun` first")
+        return
+    with open(path) as f:
+        cells = json.load(f)["cells"]
+    for cell in cells:
+        if cell.get("status") != "ok":
+            csv.add(f"roofline/{cell['key']}", 0.0,
+                    f"status={cell.get('status')}")
+            continue
+        r = cell["roofline"]
+        name = f"roofline/{cell['key']}"
+        csv.add(f"{name}/compute_s", cell.get("compile_us", 0.0),
+                f"{r['compute_s']:.6f}")
+        csv.add(f"{name}/memory_s", 0.0, f"{r['memory_s']:.6f}")
+        csv.add(f"{name}/collective_s", 0.0, f"{r['collective_s']:.6f}")
+        csv.add(f"{name}/bottleneck", 0.0, r["bottleneck"])
+        csv.add(f"{name}/useful_flops_frac", 0.0,
+                f"{r['model_flops_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

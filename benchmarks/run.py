@@ -1,0 +1,44 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Emits ``name,us_per_call,derived`` CSV rows:
+  table2_throughput  — Table 2 (throughput vs failure frequency)
+  table3_planning    — Table 3 (planning latency)
+  table4_ckpt        — Table 4 (checkpoint-overhead ablation)
+  fig10_spot_traces  — Figure 10 / Appendix C (spot instance replay)
+  fig11_breakdown    — Figure 11 (time-occupation breakdown)
+  roofline_report    — §Roofline terms from the dry-run artifact
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks.common import Csv
+
+
+def main() -> None:
+    from benchmarks import (fig10_spot_traces, fig11_breakdown,
+                            roofline_report, table2_throughput,
+                            table3_planning, table4_ckpt_ablation)
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    suites = {
+        "table2": table2_throughput.main,
+        "table3": table3_planning.main,
+        "table4": table4_ckpt_ablation.main,
+        "fig10": fig10_spot_traces.main,
+        "fig11": fig11_breakdown.main,
+        "roofline": roofline_report.main,
+    }
+    csv = Csv()
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if only and only != name:
+            continue
+        t0 = time.perf_counter()
+        fn(csv)
+        print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Paper Table 2: throughput (samples/s) under controlled failure
+frequencies (6h / 1h / 10m), 30 -> 15 nodes monotonic, for Bamboo /
+Varuna / Oobleck across the five Table-1 models."""
+from __future__ import annotations
+
+from benchmarks.common import (FAULT_TOLERANCE, FREQS, NUM_NODES, TABLE1,
+                               Csv, profile_for, timed)
+from repro.sim import (BambooPolicy, OobleckPolicy, VarunaPolicy,
+                       controlled_failures, run_sim)
+
+MAX_STAGES = 12
+
+
+def main(csv: Csv | None = None) -> None:
+    csv = csv or Csv()
+    nodes = [f"n{i}" for i in range(NUM_NODES)]
+    for model, (gb, mb, bamboo_mb, seq) in TABLE1.items():
+        prof = profile_for(model, mb)
+        bprof = profile_for(model, bamboo_mb) if bamboo_mb else prof
+        for label, interval in FREQS.items():
+            trace = controlled_failures(nodes, interval, stop_at=NUM_NODES // 2)
+            horizon = interval * (NUM_NODES // 2 + 2)
+            for mk in (
+                lambda: OobleckPolicy(prof, nodes, f=FAULT_TOLERANCE,
+                                      global_batch=gb, microbatch=mb,
+                                      max_stages=MAX_STAGES),
+                lambda: VarunaPolicy(prof, nodes, global_batch=gb,
+                                     microbatch=mb, max_stages=MAX_STAGES),
+                lambda: BambooPolicy(bprof, nodes, global_batch=gb,
+                                     microbatch=bamboo_mb or mb,
+                                     max_stages=MAX_STAGES),
+            ):
+                def cell():
+                    pol = mk()
+                    if bamboo_mb is None and pol.name == "bamboo":
+                        return pol.name, "OOM"
+                    res = run_sim(pol, trace, horizon, gb,
+                                  min_nodes=NUM_NODES // 2)
+                    if res.stopped_reason == "OOM":
+                        return pol.name, "OOM"
+                    return pol.name, f"{res.throughput:.2f}"
+                (name, derived), us = timed(cell)
+                csv.add(f"table2/{model}/{label}/{name}", us, derived)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Paper Table 3: pipeline-template planning latency (seconds) for
+varying (#nodes, #GPUs/node, #layers).
+
+Runs the REAL planner (divide-and-conquer DP with memoization) and
+reports wall-clock per single-template plan, plus the memoization win
+when planning the full consecutive template set (§4.1.2: the largest
+template fills the caches for the rest)."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import Csv, timed
+from repro.configs import get_arch
+from repro.core import PipelinePlanner, build_profile
+
+GRID_NODES = (8, 16, 24)
+GRID_GPUS = (1, 4)
+GRID_LAYERS = (24, 32, 64)
+
+
+def profile_with_layers(layers: int):
+    arch = dataclasses.replace(get_arch("gpt2"), name=f"gpt2_L{layers}",
+                               num_layers=layers)
+    return build_profile(arch, microbatch=2, seq_len=1024)
+
+
+def main(csv: Csv | None = None) -> None:
+    csv = csv or Csv()
+    for layers in GRID_LAYERS:
+        prof = profile_with_layers(layers)
+        for gpus in GRID_GPUS:
+            for n in GRID_NODES:
+                planner = PipelinePlanner(prof, gpus_per_node=gpus,
+                                          max_stages=2 * n)
+                tpl, us = timed(lambda: planner.plan(n))
+                csv.add(f"table3/plan/L{layers}/n{n}/g{gpus}", us,
+                        f"{us / 1e6:.3f}s")
+                # memoized follow-up: the (n-1)-node template reuses cache
+                _, us2 = timed(lambda: planner.plan(n - 1))
+                csv.add(f"table3/plan_memoized/L{layers}/n{n - 1}/g{gpus}",
+                        us2, f"{us2 / 1e6:.3f}s")
+
+
+if __name__ == "__main__":
+    main()

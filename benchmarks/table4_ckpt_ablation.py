@@ -1,0 +1,44 @@
+"""Paper Table 4: impact of checkpointing overhead — Varuna vs Varuna
+with free checkpoints (overhead removed, frequency raised to every 2
+iterations) vs Oobleck, on BERT-Large and GPT-3 6.7b."""
+from __future__ import annotations
+
+from benchmarks.common import (FAULT_TOLERANCE, FREQS, NUM_NODES, TABLE1,
+                               Csv, profile_for, timed)
+from repro.sim import OobleckPolicy, VarunaPolicy, controlled_failures, run_sim
+
+MODELS = ("bert_large", "gpt3_6_7b")
+MAX_STAGES = 12
+
+
+def main(csv: Csv | None = None) -> None:
+    csv = csv or Csv()
+    nodes = [f"n{i}" for i in range(NUM_NODES)]
+    for model in MODELS:
+        gb, mb, _, seq = TABLE1[model]
+        prof = profile_for(model, mb)
+        for label, interval in FREQS.items():
+            trace = controlled_failures(nodes, interval, stop_at=NUM_NODES // 2)
+            horizon = interval * (NUM_NODES // 2 + 2)
+            variants = {
+                "varuna": lambda: VarunaPolicy(
+                    prof, nodes, global_batch=gb, microbatch=mb,
+                    max_stages=MAX_STAGES),
+                "varuna_no_ckpt": lambda: VarunaPolicy(
+                    prof, nodes, global_batch=gb, microbatch=mb,
+                    ckpt_overhead=False, ckpt_every=2, max_stages=MAX_STAGES),
+                "oobleck": lambda: OobleckPolicy(
+                    prof, nodes, f=FAULT_TOLERANCE, global_batch=gb,
+                    microbatch=mb, max_stages=MAX_STAGES),
+            }
+            for vname, mk in variants.items():
+                def cell():
+                    res = run_sim(mk(), trace, horizon, gb,
+                                  min_nodes=NUM_NODES // 2)
+                    return f"{res.throughput:.2f}"
+                derived, us = timed(cell)
+                csv.add(f"table4/{model}/{label}/{vname}", us, derived)
+
+
+if __name__ == "__main__":
+    main()

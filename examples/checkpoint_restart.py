@@ -1,0 +1,80 @@
+"""Below-floor lifecycle (paper §3.4): when failures push the cluster
+under (f+1)*n0 nodes, Oobleck checkpoints, exits, and a later run
+restores the exact training state (step, params, optimizer moments,
+data cursor) once nodes are back.
+
+    PYTHONPATH=src python examples/checkpoint_restart.py
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import CheckpointManager, TrainState
+from repro.configs import get_arch, reduced
+from repro.core import (EngineConfig, InsufficientReplicasError,
+                        OobleckEngine, build_profile)
+from repro.data import ByteCorpus, GlobalBatchDispenser
+from repro.launch.train import _TEXT, microbatches
+from repro.models import Model
+from repro.optim import adamw
+from repro.runtime import HeteroTrainer
+
+
+def main():
+    arch = reduced(get_arch("gpt3_medium"), layers=3)
+    profile = build_profile(arch, microbatch=2, seq_len=32)
+    model = Model(arch, dtype=jnp.float32, remat=False, attn_impl="naive",
+                  scan_layers=False)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = adamw.AdamWConfig(lr=3e-3, warmup_steps=0, weight_decay=0.0)
+    disp = GlobalBatchDispenser(ByteCorpus(_TEXT * 50, seq_len=32))
+    ckpt_dir = tempfile.mkdtemp(prefix="oobleck_ckpt_")
+    mgr = CheckpointManager(ckpt_dir, num_layers=arch.num_layers,
+                            async_mode=False)
+
+    nodes = [f"n{i}" for i in range(4)]
+    engine = OobleckEngine(profile, nodes, EngineConfig(
+        fault_tolerance=1, global_batch=16, microbatch=2, gpus_per_node=1,
+        n0_override=2))
+    trainer = HeteroTrainer(model, engine, params, opt_cfg)
+
+    for step in range(2):
+        batches = disp.next_step(engine.batch.minibatch_sizes())
+        out = trainer.train_step([microbatches(b, 2) for b in batches])
+        print(f"[run1 step {step}] loss={out['loss']:.4f}")
+
+    # two failures push the cluster below (f+1)*n0=4 -> checkpoint + exit
+    try:
+        trainer.handle_failure({nodes[0]})
+        trainer.handle_failure({nodes[1]})
+    except InsufficientReplicasError as e:
+        print(f"[run1] below floor: {e}")
+        full = trainer.full_params()
+        opt = adamw.init(full)
+        mgr.save(TrainState(2, full, opt, disp.state(), 0))
+        print(f"[run1] checkpointed step 2 to {ckpt_dir}")
+
+    # --- later: nodes are back; restore and continue --------------------
+    template = model.init(jax.random.PRNGKey(0))
+    template["head"] = jax.tree.map(jnp.copy, template["embed"])  # untied
+    restored = mgr.restore(template, adamw.init(template))
+    print(f"[run2] restored step={restored.step} "
+          f"data_cursor={restored.data_state}")
+    engine2 = OobleckEngine(profile, [f"m{i}" for i in range(5)],
+                            EngineConfig(fault_tolerance=1, global_batch=16,
+                                         microbatch=2, gpus_per_node=1,
+                                         n0_override=2))
+    trainer2 = HeteroTrainer(model, engine2, restored.params, opt_cfg)
+    disp2 = GlobalBatchDispenser(ByteCorpus(_TEXT * 50, seq_len=32))
+    disp2.restore(restored.data_state)
+    for step in range(restored.step, restored.step + 2):
+        batches = disp2.next_step(engine2.batch.minibatch_sizes())
+        out = trainer2.train_step([microbatches(b, 2) for b in batches])
+        print(f"[run2 step {step}] loss={out['loss']:.4f}")
+    print("done — resumed exactly where run 1 stopped.")
+
+
+if __name__ == "__main__":
+    main()

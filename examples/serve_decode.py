@@ -1,0 +1,17 @@
+"""Batched serving example: prefill + KV/SSM-cache decode across three
+model families (dense GQA, Mamba2 SSD, hybrid Hymba).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch.serve import main as serve
+
+
+def main():
+    for arch in ("qwen3-1.7b", "mamba2-780m", "hymba-1.5b"):
+        print(f"\n=== {arch} ===")
+        serve(["--arch", arch, "--batch", "2", "--prompt-len", "8",
+               "--decode-steps", "8", "--layers", "2"])
+
+
+if __name__ == "__main__":
+    main()

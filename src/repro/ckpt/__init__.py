@@ -1,0 +1,3 @@
+from repro.ckpt.checkpoint import CheckpointManager, TrainState
+
+__all__ = ["CheckpointManager", "TrainState"]

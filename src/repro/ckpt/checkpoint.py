@@ -1,0 +1,179 @@
+"""Layer-granular checkpointing with async snapshot and atomic manifest.
+
+The checkpoint unit is one LAYER's state (params + both Adam moments) —
+the same unit Oobleck copies between replicas during reconfiguration, so
+the restart path (used only when < (f+1)*n0 nodes remain, §3.4) and the
+live-copy path share a format.
+
+Layout:
+    <dir>/step_<N>/layer_<i>.npz      one record per model layer
+    <dir>/step_<N>/extra.npz          embed/head/final-norm + opt scalars
+    <dir>/step_<N>/MANIFEST.json      written LAST via atomic rename;
+                                      a step without a manifest is garbage
+Async mode snapshots arrays on the caller thread (cheap host copy) and
+writes on a daemon thread — training resumes immediately, matching the
+CheckFreq-style overlap discussed in §7.4.3.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        key = prefix + jax.tree_util.keystr(path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+@dataclasses.dataclass
+class TrainState:
+    step: int
+    params: Any
+    opt_state: Any
+    data_state: Dict
+    rng_seed: int
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, num_layers: int,
+                 async_mode: bool = True, keep: int = 2):
+        self.dir = directory
+        self.num_layers = num_layers
+        self.async_mode = async_mode
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def save(self, state: TrainState, block: bool = False) -> None:
+        # Snapshot to host numpy NOW (consistent view), write async.
+        payload = self._snapshot(state)
+        if self.async_mode and not block:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(payload,), daemon=True)
+            self._thread.start()
+        else:
+            self._write(payload)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _snapshot(self, state: TrainState) -> Dict:
+        params, opt = state.params, state.opt_state
+        layers: List[Dict[str, np.ndarray]] = []
+        blocks = params["blocks"]
+        m_blocks = opt.m["blocks"]
+        v_blocks = opt.v["blocks"]
+        for i in range(self.num_layers):
+            rec: Dict[str, np.ndarray] = {}
+            rec.update(_flatten(jax.tree.map(lambda t: t[i], blocks), "p"))
+            rec.update(_flatten(jax.tree.map(lambda t: t[i], m_blocks), "m"))
+            rec.update(_flatten(jax.tree.map(lambda t: t[i], v_blocks), "v"))
+            layers.append(rec)
+        extra: Dict[str, np.ndarray] = {}
+        for part in ("embed", "final_norm", "head"):
+            if part in params:
+                extra.update(_flatten(params[part], f"p/{part}"))
+                extra.update(_flatten(opt.m[part], f"m/{part}"))
+                extra.update(_flatten(opt.v[part], f"v/{part}"))
+        extra["opt_step"] = np.asarray(opt.step)
+        return {
+            "step": state.step,
+            "layers": layers,
+            "extra": extra,
+            "meta": {"step": state.step, "num_layers": self.num_layers,
+                     "data_state": state.data_state,
+                     "rng_seed": state.rng_seed},
+        }
+
+    def _write(self, payload: Dict) -> None:
+        step = payload["step"]
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = tempfile.mkdtemp(dir=self.dir, prefix=".tmp_")
+        try:
+            for i, rec in enumerate(payload["layers"]):
+                np.savez(os.path.join(tmp, f"layer_{i:04d}.npz"), **rec)
+            np.savez(os.path.join(tmp, "extra.npz"), **payload["extra"])
+            with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+                json.dump(payload["meta"], f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+        finally:
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp, ignore_errors=True)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.list_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def list_steps(self) -> List[int]:
+        out = []
+        for name in sorted(os.listdir(self.dir)):
+            full = os.path.join(self.dir, name)
+            if (name.startswith("step_")
+                    and os.path.exists(os.path.join(full, "MANIFEST.json"))):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def restore(self, template_params: Any, template_opt: Any,
+                step: Optional[int] = None) -> TrainState:
+        """Restore into the structure of (template_params, template_opt)."""
+        steps = self.list_steps()
+        if not steps:
+            raise FileNotFoundError(f"no complete checkpoint in {self.dir}")
+        step = steps[-1] if step is None else step
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "MANIFEST.json")) as f:
+            meta = json.load(f)
+
+        def load_into(tree, record, prefix):
+            flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+            leaves = []
+            for path, leaf in flat:
+                key = prefix + jax.tree_util.keystr(path)
+                arr = record[key]
+                assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+                leaves.append(arr.astype(leaf.dtype))
+            return jax.tree_util.tree_unflatten(treedef, leaves)
+
+        blocks_t = jax.tree.map(lambda t: t[0], template_params["blocks"])
+        p_layers, m_layers, v_layers = [], [], []
+        for i in range(meta["num_layers"]):
+            rec = dict(np.load(os.path.join(d, f"layer_{i:04d}.npz")))
+            p_layers.append(load_into(blocks_t, rec, "p"))
+            m_layers.append(load_into(blocks_t, rec, "m"))
+            v_layers.append(load_into(blocks_t, rec, "v"))
+        stack = lambda layers: jax.tree.map(lambda *xs: np.stack(xs), *layers)
+        extra = dict(np.load(os.path.join(d, "extra.npz")))
+        params = {"blocks": stack(p_layers)}
+        m = {"blocks": stack(m_layers)}
+        v = {"blocks": stack(v_layers)}
+        for part in ("embed", "final_norm", "head"):
+            if part in template_params:
+                params[part] = load_into(template_params[part], extra, f"p/{part}")
+                m[part] = load_into(template_params[part], extra, f"m/{part}")
+                v[part] = load_into(template_params[part], extra, f"v/{part}")
+        opt = type(template_opt)(step=extra["opt_step"], m=m, v=v)
+        return TrainState(step=meta["step"], params=params, opt_state=opt,
+                          data_state=meta["data_state"],
+                          rng_seed=meta["rng_seed"])

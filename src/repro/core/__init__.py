@@ -1,0 +1,31 @@
+# The paper's primary contribution: pipeline-template planning and the
+# resilient execution engine (Oobleck, SOSP 2023).
+from repro.core.batch import BatchPlan, distribute_batch, distribute_microbatches
+from repro.core.cost_model import LayerCost, ModelProfile, build_profile
+from repro.core.engine import EngineConfig, OobleckEngine
+from repro.core.instantiator import (InstantiationPlan, choose_plan,
+                                     enumerate_feasible_sets)
+from repro.core.monitor import ClusterEvent, NodeChangeMonitor
+from repro.core.planner import PipelinePlanner, estimate_iteration_time
+from repro.core.reconfigure import (CopyTask, InsufficientReplicasError,
+                                    PipelineInstance, ReconfigResult,
+                                    Reconfigurator)
+from repro.core.sync import (LayerGroup, SyncBucket, build_sync_plan,
+                             layer_groups, verify_replica_coverage)
+from repro.core.templates import (NodeSpec, PipelineTemplate, PlanningError,
+                                  StageSpec, coverable, generate_node_spec)
+
+__all__ = [
+    "BatchPlan", "distribute_batch", "distribute_microbatches",
+    "LayerCost", "ModelProfile", "build_profile",
+    "EngineConfig", "OobleckEngine",
+    "InstantiationPlan", "choose_plan", "enumerate_feasible_sets",
+    "ClusterEvent", "NodeChangeMonitor",
+    "PipelinePlanner", "estimate_iteration_time",
+    "CopyTask", "InsufficientReplicasError", "PipelineInstance",
+    "ReconfigResult", "Reconfigurator",
+    "LayerGroup", "SyncBucket", "build_sync_plan", "layer_groups",
+    "verify_replica_coverage",
+    "NodeSpec", "PipelineTemplate", "PlanningError", "StageSpec",
+    "coverable", "generate_node_spec",
+]

@@ -1,0 +1,192 @@
+"""Oobleck execution engine: lifecycle orchestration (paper §3.3–3.4).
+
+Ties the planning artifacts together:
+
+  bootstrap:  n0 (memory floor) -> node spec -> pipeline templates
+              -> instantiation plan -> pipeline instances + batch plan
+  on event:   failure  -> Reconfigurator (reinstantiate/borrow/merge)
+                          -> state-copy plan -> batch redistribution
+              join     -> global re-instantiation over the larger cluster
+              warning  -> drain flag (finish the in-flight iteration)
+  exit:       InsufficientReplicas -> checkpoint + raise (user restarts
+              later from the stored progress)
+
+The engine is runtime-agnostic: the discrete-event simulator (sim/) and
+the real JAX runtime (runtime/) both drive it; they only differ in what
+"executing an iteration" means.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from typing import Callable, Dict, List, Optional, Sequence, Set
+
+from repro.core import cost_model as cm
+from repro.core.batch import BatchPlan
+from repro.core.instantiator import InstantiationPlan, choose_plan
+from repro.core.monitor import ClusterEvent, NodeChangeMonitor
+from repro.core.planner import PipelinePlanner, estimate_iteration_time
+from repro.core.reconfigure import (InsufficientReplicasError,
+                                    PipelineInstance, ReconfigResult,
+                                    Reconfigurator)
+from repro.core.sync import SyncBucket, build_sync_plan
+from repro.core.templates import (NodeSpec, PipelineTemplate,
+                                  generate_node_spec)
+from repro.utils import hw as hwlib
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    fault_tolerance: int                 # f
+    global_batch: int
+    microbatch: int
+    gpus_per_node: int = 1
+    n0_override: Optional[int] = None    # force n0 (tests / experiments)
+    planner_mode: str = "peel"
+    max_stages: Optional[int] = None
+    bucket_cap_bytes: int = 64 * 1024 * 1024
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    reconfigurations: int = 0
+    restarts: int = 0
+    total_copy_bytes: int = 0
+    lost_iterations: int = 0
+    planning_seconds: float = 0.0
+
+
+class OobleckEngine:
+    def __init__(self, profile: cm.ModelProfile, nodes: Sequence[str],
+                 config: EngineConfig,
+                 monitor: Optional[NodeChangeMonitor] = None,
+                 on_checkpoint: Optional[Callable[[], None]] = None):
+        self.profile = profile
+        self.config = config
+        self.monitor = monitor or NodeChangeMonitor()
+        self.monitor.subscribe(self._on_event)
+        self.on_checkpoint = on_checkpoint
+        self.metrics = EngineMetrics()
+        self.draining = False
+        self.stopped = False
+
+        t0 = _time.perf_counter()
+        n0 = (config.n0_override if config.n0_override is not None
+              else profile.min_nodes(config.gpus_per_node))
+        self.spec: NodeSpec = generate_node_spec(
+            N=len(nodes), f=config.fault_tolerance, n0=n0,
+            max_size=profile.num_layers)
+        planner = PipelinePlanner(profile, config.gpus_per_node,
+                                  mode=config.planner_mode,
+                                  max_stages=config.max_stages)
+        self.templates: Dict[int, PipelineTemplate] = planner.plan_all(
+            self.spec.sizes)
+        self.planner = planner
+        self.reconf = Reconfigurator(self.templates, self.spec, profile,
+                                     config.global_batch, config.microbatch)
+        plan = choose_plan(self.templates, self.spec, len(nodes),
+                           config.global_batch, config.microbatch)
+        self.metrics.planning_seconds = _time.perf_counter() - t0
+
+        self.instances: List[PipelineInstance] = []
+        cursor = 0
+        node_list = list(nodes)
+        for size in plan.pipeline_sizes():
+            self.instances.append(self.reconf._instantiate(
+                size, node_list[cursor:cursor + size]))
+            cursor += size
+        self.batch: BatchPlan = plan.batch
+        self.last_reconfig: Optional[ReconfigResult] = None
+
+    # ------------------------------------------------------------------
+    @property
+    def nodes(self) -> List[str]:
+        return [n for inst in self.instances for n in inst.nodes]
+
+    def sync_plan(self) -> List[SyncBucket]:
+        layer_bytes = [l.param_bytes for l in self.profile.layers]
+        return build_sync_plan(self.instances, layer_bytes,
+                               self.config.bucket_cap_bytes)
+
+    def iteration_time(self) -> float:
+        """Estimated wall time of one global step for the current config
+        (max over pipelines + layer-sync overhead not hidden by overlap)."""
+        times = [estimate_iteration_time(inst.template, nb)
+                 for inst, nb in zip(self.instances, self.batch.num_microbatches)]
+        return max(times) + self._sync_tail_seconds()
+
+    def throughput(self) -> float:
+        return self.config.global_batch / self.iteration_time()
+
+    def _sync_tail_seconds(self) -> float:
+        """Non-overlappable part of cross-pipeline grad sync: the last
+        bucket's all-reduce (everything earlier hides in backward)."""
+        plan = self.sync_plan()
+        if not plan or len(self.instances) <= 1:
+            return 0.0
+        last = plan[-1]
+        k = max(len(g) for g in last.groups)
+        return hwlib.allreduce_time(last.nbytes / max(len(last.groups), 1), k,
+                                    hw=self.profile.hw)
+
+    def reconfiguration_seconds(self, result: ReconfigResult) -> float:
+        """Wall-clock estimate of a reconfiguration: state copy dominates
+        (paper Fig. 11 'copying overhead'); planning is a table lookup."""
+        per_node: Dict[str, int] = {}
+        for t in result.copy_plan:
+            per_node[t.src_node] = per_node.get(t.src_node, 0) + t.nbytes
+            per_node[t.dst_node] = per_node.get(t.dst_node, 0) + t.nbytes
+        worst = max(per_node.values(), default=0)
+        return hwlib.p2p_time(worst, hw=self.profile.hw) + 1.0  # +1s barrier/regroup
+
+    # ------------------------------------------------------------------
+    def _on_event(self, ev: ClusterEvent) -> None:
+        if ev.kind == NodeChangeMonitor.WARN:
+            self.draining = True
+            return
+        if ev.kind == NodeChangeMonitor.FAIL:
+            self.handle_failure(set(ev.nodes))
+        elif ev.kind == NodeChangeMonitor.JOIN:
+            self.handle_join(list(ev.nodes))
+
+    def handle_failure(self, dead: Set[str]) -> ReconfigResult:
+        dead = {d for d in dead if d in set(self.nodes)}
+        if not dead:
+            return ReconfigResult(self.instances, [], self.batch)
+        try:
+            result = self.reconf.on_failure(self.instances, dead)
+        except InsufficientReplicasError:
+            self.stopped = True
+            self.metrics.restarts += 1
+            if self.on_checkpoint:
+                self.on_checkpoint()
+            raise
+        self.instances = result.instances
+        self.batch = result.batch
+        self.metrics.reconfigurations += 1
+        self.metrics.total_copy_bytes += result.copy_bytes()
+        self.metrics.lost_iterations += 1  # the in-flight iteration is lost
+        self.last_reconfig = result
+        return result
+
+    def rebalance(self, observed_times: Sequence[float]) -> BatchPlan:
+        """Straggler mitigation: re-run batch distribution (Eq. 6) with
+        MEASURED per-pipeline per-microbatch times instead of the cost
+        model's estimates.  Call with the last iteration's timings when a
+        pipeline runs hot (thermal throttling, shared-fabric noise)."""
+        from repro.core.batch import distribute_microbatches
+        total_mb = self.config.global_batch // self.config.microbatch
+        counts = distribute_microbatches(list(observed_times), total_mb)
+        self.batch = BatchPlan(num_microbatches=tuple(counts),
+                               microbatch_size=self.config.microbatch,
+                               global_batch=self.config.global_batch)
+        return self.batch
+
+    def handle_join(self, new_nodes: List[str]) -> ReconfigResult:
+        result = self.reconf.on_join(self.instances, new_nodes)
+        self.instances = result.instances
+        self.batch = result.batch
+        self.metrics.reconfigurations += 1
+        self.metrics.total_copy_bytes += result.copy_bytes()
+        self.last_reconfig = result
+        return result

@@ -1,0 +1,60 @@
+"""Node change monitor (paper §3.3/§6.2).
+
+The original launches a CPU agent per node with a TCP connection to a
+central coordinator; socket disconnects signal failure instantly (NCCL
+alone would hang until timeout).  Here the same role is played by an
+event bus: real deployments adapt ``ClusterMembership`` to the TPU
+coordination service's health callbacks; tests and the simulator inject
+events deterministically.  Preemption *warnings* (spot instances' grace
+period) are first-class events, used by the engine to drain the current
+iteration before the node disappears.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Callable, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class ClusterEvent:
+    time: float
+    seq: int
+    kind: str = dataclasses.field(compare=False)  # fail | join | warn
+    nodes: Tuple[str, ...] = dataclasses.field(compare=False)
+
+
+class NodeChangeMonitor:
+    """Deterministic event bus: sources push, the engine subscribes."""
+
+    FAIL, JOIN, WARN = "fail", "join", "warn"
+
+    def __init__(self):
+        self._queue: List[ClusterEvent] = []
+        self._seq = itertools.count()
+        self._subscribers: List[Callable[[ClusterEvent], None]] = []
+
+    def subscribe(self, fn: Callable[[ClusterEvent], None]) -> None:
+        self._subscribers.append(fn)
+
+    def inject(self, kind: str, nodes: Sequence[str], time: float = 0.0) -> None:
+        ev = ClusterEvent(time=time, seq=next(self._seq), kind=kind,
+                          nodes=tuple(nodes))
+        heapq.heappush(self._queue, ev)
+
+    def pending(self) -> bool:
+        return bool(self._queue)
+
+    def next_event_time(self) -> Optional[float]:
+        return self._queue[0].time if self._queue else None
+
+    def poll(self, now: float) -> List[ClusterEvent]:
+        """Pop and dispatch every event with time <= now."""
+        fired: List[ClusterEvent] = []
+        while self._queue and self._queue[0].time <= now:
+            ev = heapq.heappop(self._queue)
+            fired.append(ev)
+            for fn in self._subscribers:
+                fn(ev)
+        return fired

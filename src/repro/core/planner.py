@@ -1,0 +1,228 @@
+"""GPU–stage mapping via divide-and-conquer DP (paper §4.1.2).
+
+Given a pipeline template's node count ``n`` (each node = ``M`` chips), the
+planner simultaneously partitions the model's layers into stages and the
+``n*M`` chips onto those stages, minimizing the 1F1B critical-path estimate
+
+    T = T1 + T2 + T3          (Figure 5)
+
+where, for a stage sequence with per-stage one-microbatch times
+``ts[0..S-1]`` and slowest stage ``k* = argmax ts``:
+
+    T1 = sum(ts)                          # fill + drain
+    T2 = (N_b - S + k* - 1) * ts[k*]      # steady phase on the slowest stage
+    T3 = sum(ts[k*:])                     # tail after the slowest stage
+
+with ``N_b = 4*S`` during planning (paper: bubble negligible at N_b >= 4S).
+For a homogeneous pipeline this reduces to the exact 1F1B makespan
+``(N_b + S - 1)(F + B)``.
+
+Two division strategies, both memoized on ``(S', u, v, d, off)`` where
+``off`` is the first chip's intra-node offset (stages must not straddle
+nodes — paper's single-node-stage constraint, mapped to ICI neighborhoods
+per DESIGN.md §2):
+
+  * ``mode="binary"`` — the paper's literal recursion: iterate all
+    (s, k, m) stage/layer/chip splits (Eq. 1–3).
+  * ``mode="peel"``   — split off the first stage only (s=1).  Every stage
+    sequence reachable by binary splits is reachable by peeling, and
+    T1/T2/T3 depend only on the resulting stage sequence, so the optimum
+    is the same; peeling visits far fewer split trees.  Default.
+
+The memo is shared across template sizes: planning the largest template
+fills the caches for all smaller ones (paper §4.1.2 memoization note).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.cost_model import ModelProfile
+from repro.core.templates import PipelineTemplate, PlanningError, StageSpec
+
+INF = float("inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class _Sol:
+    """Memoized sub-solution for (S', u, v, d, off)."""
+
+    total: float              # local objective T1 + T2 + T3  (N_b = 4*S')
+    t1: float
+    t3: float
+    k_star: int               # slowest stage index, local numbering
+    t_max: float              # ts[k_star]
+    # decision: None for a leaf; peel: (1, k, m); binary: (s, k, m)
+    cut: Optional[Tuple[int, int, int]]
+
+
+def _combine(left: _Sol, right: _Sol, s_left: int, s_total: int) -> Tuple[float, float, float, int, float]:
+    """Combine two sub-solutions (Eq. 1–3). Returns (total,t1,t3,k*,t_max)."""
+    t1 = left.t1 + right.t1
+    if left.t_max >= right.t_max:            # k* == k1*  (Eq. 3, first case)
+        k_star, t_max = left.k_star, left.t_max
+        t3 = left.t3 + right.t1
+    else:                                    # k* in the right sub-problem
+        k_star, t_max = s_left + right.k_star, right.t_max
+        t3 = right.t3
+    n_b = 4 * s_total
+    t2 = (n_b - s_total + k_star - 1) * t_max
+    return t1 + t2 + t3, t1, t3, k_star, t_max
+
+
+def _min_segments(d: int, off: int, M: int) -> int:
+    """Minimum stages needed so no stage straddles a node boundary."""
+    first = min(d, M - off)
+    rest = d - first
+    return 1 + (rest + M - 1) // M if rest else 1
+
+
+class PipelinePlanner:
+    """Plans GPU–stage mappings for every template size of one model."""
+
+    def __init__(self, profile: ModelProfile, gpus_per_node: int,
+                 mode: str = "peel", max_stages: Optional[int] = None):
+        if mode not in ("peel", "binary"):
+            raise ValueError(f"unknown mode {mode!r}")
+        self.profile = profile
+        self.M = gpus_per_node
+        self.mode = mode
+        self.max_stages = max_stages
+        self.L = profile.num_layers
+        self._memo: Dict[Tuple[int, int, int, int, int], _Sol] = {}
+        self._leaf_cache: Dict[Tuple[int, int, int], float] = {}
+
+    # ------------------------------------------------------------------
+    def plan(self, num_nodes: int) -> PipelineTemplate:
+        """Best template for ``num_nodes`` nodes: argmin over S of T(S,...)."""
+        n, M, L = num_nodes, self.M, self.L
+        d = n * M
+        if L < n:
+            raise PlanningError(
+                f"model has {L} layers < {n} nodes; cannot give every node a stage")
+        s_lo = n                       # pigeonhole: >= 1 stage per node
+        s_hi = min(L, d)
+        if self.max_stages is not None:
+            s_hi = min(s_hi, max(s_lo, self.max_stages))
+        best: Optional[_Sol] = None
+        best_s = -1
+        for S in range(s_lo, s_hi + 1):
+            sol = self._solve(S, 0, L, d, 0)
+            if sol.total < (best.total if best else INF):
+                best, best_s = sol, S
+        if best is None or math.isinf(best.total):
+            raise PlanningError(f"no feasible mapping for {n} nodes x {M} GPUs")
+        return self._reconstruct(best_s, num_nodes, best)
+
+    def plan_all(self, sizes) -> Dict[int, PipelineTemplate]:
+        """Plan every template size, largest first to maximize memo reuse."""
+        out: Dict[int, PipelineTemplate] = {}
+        for n in sorted(sizes, reverse=True):
+            out[n] = self.plan(n)
+        return dict(sorted(out.items()))
+
+    # ------------------------------------------------------------------
+    def _leaf_time(self, u: int, v: int, d: int) -> float:
+        key = (u, v, d)
+        t = self._leaf_cache.get(key)
+        if t is None:
+            t = (self.profile.stage_fwd(u, v, d) + self.profile.stage_bwd(u, v, d))
+            self._leaf_cache[key] = t
+        return t
+
+    def _solve(self, S: int, u: int, v: int, d: int, off: int) -> _Sol:
+        key = (S, u, v, d, off)
+        hit = self._memo.get(key)
+        if hit is not None:
+            return hit
+        sol = self._compute(S, u, v, d, off)
+        self._memo[key] = sol
+        return sol
+
+    def _infeasible(self) -> _Sol:
+        return _Sol(INF, INF, INF, 0, INF, None)
+
+    def _compute(self, S: int, u: int, v: int, d: int, off: int) -> _Sol:
+        M = self.M
+        if v - u < S or d < S:          # each stage needs >= 1 layer, 1 GPU
+            return self._infeasible()
+        if S == 1:
+            if off + d > M:             # conquer: stage within one node
+                return self._infeasible()
+            t = self._leaf_time(u, v, d)
+            # T1 = F+B; T2 = 2(F+B); T3 = F+B  (Eq. 4) -> total = 4(F+B)
+            return _Sol(4.0 * t, t, t, 0, t, None)
+        if _min_segments(d, off, M) > S:
+            return self._infeasible()
+
+        best: Optional[_Sol] = None
+        if self.mode == "peel":
+            splits = [(1, k, m)
+                      for m in range(1, min(d - (S - 1), M - off) + 1)
+                      for k in range(u + 1, v - (S - 1) + 1)]
+        else:
+            splits = [(s, k, m)
+                      for s in range(1, S)
+                      for k in range(u + s, v - (S - s) + 1)
+                      for m in range(s, d - (S - s) + 1)]
+        for s, k, m in splits:
+            left = self._solve(s, u, k, m, off)
+            if math.isinf(left.total):
+                continue
+            right = self._solve(S - s, k, v, d - m, (off + m) % M)
+            if math.isinf(right.total):
+                continue
+            total, t1, t3, k_star, t_max = _combine(left, right, s, S)
+            if best is None or total < best.total:
+                best = _Sol(total, t1, t3, k_star, t_max, (s, k, m))
+        return best if best is not None else self._infeasible()
+
+    # ------------------------------------------------------------------
+    def _stage_sequence(self, S: int, u: int, v: int, d: int, off: int
+                        ) -> List[Tuple[int, int, int]]:
+        """Reconstruct [(layer_start, layer_end, num_gpus), ...]."""
+        sol = self._solve(S, u, v, d, off)
+        if math.isinf(sol.total):
+            raise PlanningError("reconstruction reached infeasible state")
+        if sol.cut is None:
+            return [(u, v, d)]
+        s, k, m = sol.cut
+        left = self._stage_sequence(s, u, k, m, off)
+        right = self._stage_sequence(S - s, k, v, d - m, (off + m) % self.M)
+        return left + right
+
+    def _reconstruct(self, S: int, num_nodes: int, root: _Sol) -> PipelineTemplate:
+        seq = self._stage_sequence(S, 0, self.L, num_nodes * self.M, 0)
+        stages: List[StageSpec] = []
+        cursor = 0
+        times: List[float] = []
+        for sid, (u, v, d) in enumerate(seq):
+            stages.append(StageSpec(
+                stage_id=sid, layer_start=u, layer_end=v,
+                node_offset=cursor // self.M, num_gpus=d,
+                gpu_offset=cursor % self.M))
+            times.append(self._leaf_time(u, v, d))
+            cursor += d
+        k_star = max(range(len(times)), key=lambda i: times[i])
+        t_max = times[k_star]
+        n_b = 4 * S
+        t1 = sum(times)
+        t2 = (n_b - S + k_star - 1) * t_max
+        t3 = sum(times[k_star:])
+        tpl = PipelineTemplate(
+            num_nodes=num_nodes, gpus_per_node=self.M, num_stages=S,
+            stages=tuple(stages), iteration_time=t1 + t2 + t3,
+            t1=t1, t2=t2, t3=t3, slowest_stage=k_star,
+            stage_times=tuple(times))
+        tpl.validate(self.L)
+        return tpl
+
+
+# ----------------------------------------------------------------------
+def estimate_iteration_time(tpl: PipelineTemplate, num_microbatches: int) -> float:
+    """1F1B makespan estimate for an instantiated pipeline running
+    ``num_microbatches`` microbatches (affine in N_b)."""
+    n_b = max(num_microbatches, tpl.num_stages)  # cannot go below fill
+    t2 = (n_b - tpl.num_stages + tpl.slowest_stage - 1) * tpl.stage_times[tpl.slowest_stage]
+    return tpl.t1 + max(t2, 0.0) + tpl.t3

@@ -1,0 +1,121 @@
+"""Layer-granularity gradient synchronization planning (paper §6.1).
+
+Heterogeneous pipelines place the same layer in different stages on
+different node sets, so stage-granular data-parallel all-reduce is
+impossible.  Oobleck instead synchronizes per *layer*: for every layer,
+the nodes holding that layer across all pipeline replicas form a
+communication group (a dedicated NCCL subcommunicator in the original; a
+per-bucket collective over an explicit device subset in our JAX runtime).
+
+Consecutive layers with identical peer structure are merged into buckets
+(PyTorch-style bucketing) so small layers don't issue tiny collectives,
+and buckets are emitted in reverse-depth order so the runtime can overlap
+each bucket's all-reduce with the backward of earlier layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+from repro.core.reconfigure import PipelineInstance
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerGroup:
+    """Sync participants for one layer: one entry per pipeline replica."""
+
+    layer: int
+    # per replica: ordered tuple of nodes holding this layer's shards
+    replicas: Tuple[Tuple[str, ...], ...]
+
+    @property
+    def uniform_sharding(self) -> bool:
+        """True if every replica shards this layer over the same number of
+        nodes — the fast path where shard-wise ring all-reduce applies."""
+        widths = {len(r) for r in self.replicas}
+        return len(widths) == 1
+
+    def peer_groups(self) -> List[Tuple[str, ...]]:
+        """Concrete all-reduce groups.
+
+        Fast path (uniform sharding): shard i of every replica forms one
+        group.  Slow path (widths differ): the lead node of each replica
+        gathers its pipeline's full layer gradient, leads all-reduce, then
+        re-scatter — expressed here as a single lead group; the
+        gather/scatter legs are intra-replica.
+        """
+        if self.uniform_sharding:
+            width = len(self.replicas[0])
+            return [tuple(rep[i] for rep in self.replicas)
+                    for i in range(width)]
+        return [tuple(rep[0] for rep in self.replicas)]
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncBucket:
+    """Consecutive layers sharing identical peer structure."""
+
+    layer_start: int
+    layer_end: int
+    groups: Tuple[Tuple[str, ...], ...]
+    nbytes: int
+
+    @property
+    def num_layers(self) -> int:
+        return self.layer_end - self.layer_start
+
+
+def layer_groups(instances: Sequence[PipelineInstance]) -> List[LayerGroup]:
+    if not instances:
+        return []
+    num_layers = instances[0].template.num_layers
+    out: List[LayerGroup] = []
+    for l in range(num_layers):
+        reps = tuple(tuple(inst.layer_owners(l)) for inst in instances)
+        out.append(LayerGroup(layer=l, replicas=reps))
+    return out
+
+
+def build_sync_plan(instances: Sequence[PipelineInstance],
+                    layer_bytes: Sequence[int],
+                    bucket_cap_bytes: int = 64 * 1024 * 1024) -> List[SyncBucket]:
+    """Bucketed, reverse-depth-ordered sync plan.
+
+    ``layer_bytes[l]`` is the gradient payload of layer ``l`` (bf16).
+    Buckets close when the peer structure changes or the cap is reached.
+    Returned deepest-first: bucket i can be all-reduced while backward of
+    shallower layers still runs (compute/comm overlap, §6.1).
+    """
+    groups = layer_groups(instances)
+    buckets: List[SyncBucket] = []
+    cur_lo = cur_hi = -1            # current bucket covers [cur_lo, cur_hi)
+    cur_groups: Tuple[Tuple[str, ...], ...] = ()
+    cur_bytes = 0
+
+    def flush():
+        nonlocal cur_lo, cur_hi, cur_bytes
+        if cur_lo >= 0:
+            buckets.append(SyncBucket(cur_lo, cur_hi, cur_groups, cur_bytes))
+        cur_lo, cur_hi, cur_bytes = -1, -1, 0
+
+    for g in reversed(groups):          # deepest layer first
+        pg = tuple(g.peer_groups())
+        nbytes = int(layer_bytes[g.layer])
+        if (cur_lo < 0 or pg != cur_groups
+                or cur_bytes + nbytes > bucket_cap_bytes):
+            flush()
+            cur_lo, cur_hi, cur_groups, cur_bytes = g.layer, g.layer + 1, pg, nbytes
+        else:
+            cur_lo = g.layer
+            cur_bytes += nbytes
+    flush()
+    return buckets
+
+
+def verify_replica_coverage(instances: Sequence[PipelineInstance]) -> bool:
+    """Paper §3.2 invariant: every layer has >= 1 owner; recoverability
+    needs >= 1 complete set of owners across pipelines."""
+    if not instances:
+        return False
+    return all(len(g.replicas) >= 1 and all(len(r) >= 1 for r in g.replicas)
+               for g in layer_groups(instances))

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (ByteCorpus, DataCursor, GlobalBatchDispenser,
+                                 SyntheticLM)
+
+__all__ = ["ByteCorpus", "DataCursor", "GlobalBatchDispenser", "SyntheticLM"]

@@ -1,0 +1,134 @@
+"""Causal GQA flash-attention forward — Pallas TPU kernel.
+
+TPU-native design (not a CUDA port): the grid is (batch, q_heads,
+q_blocks, kv_blocks) and Mosaic executes it sequentially with the last
+axis innermost, so the online-softmax running state (m, l, acc) lives in
+VMEM scratch that persists across the kv_block iterations of one
+(b, h, q_blk) triple.  BlockSpecs tile Q/K/V into VMEM:
+
+    q   : (1, 1, BLOCK_Q, D)   revisited for every kv block
+    k/v : (1, 1, BLOCK_K, D)   indexed via the GQA head map h -> h//G
+    o   : (1, 1, BLOCK_Q, D)   written on the last kv block
+
+Block shapes default to (128, 128) so the MXU sees aligned GEMMs and the
+working set (q + k + v + acc ≈ 4 * 128 * D * 4B) stays far under VMEM.
+Causality is enforced two ways: fully-masked kv blocks are skipped with
+``pl.when`` (no wasted MXU work), and the diagonal block gets an explicit
+position mask.  Optional sliding-window masking supports the Hymba SWA
+branch.  The backward pass uses the standard recompute-from-residuals
+formulation via ``jax.custom_vjp`` in ops.py (forward kernel + XLA
+backward), which keeps the kernel surface small while remat already
+re-runs the forward on TPU.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  block_q: int, block_k: int, seq_len: int, window: int,
+                  num_kv_blocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    # causal: skip blocks strictly above the diagonal; with a window also
+    # skip blocks entirely left of it.
+    in_past = k_start <= q_start + block_q - 1
+    in_window = (window <= 0) | (k_start + block_k - 1 > q_start - window)
+
+    @pl.when(in_past & in_window)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)            # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+        s = s * (1.0 / math.sqrt(q.shape[-1]))          # [bq, bk]
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = (kpos <= qpos) & (kpos < seq_len)
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                             # [bq, 1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = (acc_ref[...] * corr
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    window: int = 0,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False) -> jax.Array:
+    """Causal GQA attention.
+
+    q: [B, S, H, D]; k/v: [B, S, KV, D]; H % KV == 0.  Returns [B, S, H, D].
+    """
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    assert H % KV == 0, (H, KV)
+    G = H // KV
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    nq = -(-S // block_q)
+    nk = -(-S // block_k)
+    pad_q = nq * block_q - S
+    pad_k = nk * block_k - S
+    qt = jnp.pad(q.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    kt = jnp.pad(k.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    vt = jnp.pad(v.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, seq_len=S,
+        window=window, num_kv_blocks=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nq * block_q, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),   # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),   # m (running max)
+            pltpu.VMEM((block_q, 1), jnp.float32),   # l (running denom)
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out[:, :, :S].transpose(0, 2, 1, 3)

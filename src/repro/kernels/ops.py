@@ -1,0 +1,72 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``interpret`` auto-selects: on the CPU container the kernels execute via
+the Pallas interpreter (Python semantics, exact same kernel body); on TPU
+they compile to Mosaic.  Both kernels get a ``jax.custom_vjp`` whose
+backward recomputes through the pure-jnp oracle — flash-attention
+backward-via-recompute is standard practice under activation
+checkpointing, and it keeps the kernel surface auditable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
+from repro.kernels import ssd as _ssd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ----------------------------------------------------------------------
+# Flash attention
+# ----------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, window: int = 0, block_q: int = 128,
+                    block_k: int = 128):
+    return _fa.flash_attention(q, k, v, window=window, block_q=block_q,
+                               block_k=block_k, interpret=_interpret())
+
+
+def _fa_fwd(q, k, v, window, block_q, block_k):
+    out = flash_attention(q, k, v, window, block_q, block_k)
+    return out, (q, k, v)
+
+
+def _fa_bwd(window, block_q, block_k, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q, k, v: _ref.attention_ref(q, k, v,
+                                                        window=window),
+                     q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# ----------------------------------------------------------------------
+# SSD (Mamba2 chunked scan)
+# ----------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def ssd(x, dt, A, B, C, chunk: int = 128) -> Tuple[jax.Array, jax.Array]:
+    return _ssd.ssd(x, dt, A, B, C, chunk=chunk, interpret=_interpret())
+
+
+def _ssd_fwd(x, dt, A, B, C, chunk):
+    out = ssd(x, dt, A, B, C, chunk)
+    return out, (x, dt, A, B, C)
+
+
+def _ssd_bwd(chunk, res, g):
+    x, dt, A, B, C = res
+    _, vjp = jax.vjp(lambda *a: _ref.ssd_ref(*a), x, dt, A, B, C)
+    return vjp(g)
+
+
+ssd.defvjp(_ssd_fwd, _ssd_bwd)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (no pallas imports here).
+
+These are the ground truth the kernels must match under interpret=True
+(CPU) and on real TPU.  Deliberately written in the most obvious way —
+O(S^2) score materialization, per-timestep scan — so they are easy to
+audit against the math.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  window: int = 0) -> jax.Array:
+    """Causal GQA attention oracle.  q: [B,S,H,D]; k/v: [B,S,KV,D]."""
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, kf) / jnp.sqrt(D)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, vf)
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+            C: jax.Array, state=None):
+    """SSD oracle: exact per-timestep recurrence.
+
+    x: [b,S,H,P]; dt: [b,S,H] (post-softplus); A: [H] (negative);
+    B/C: [b,S,H,N].  Returns (y [b,S,H,P], final_state [b,H,P,N]).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    if state is None:
+        state = jnp.zeros((b, H, P, N), jnp.float32)
+
+    def step(st, inp):
+        xt, dtt, Bt, Ct = inp
+        dA = jnp.exp(dtt.astype(jnp.float32) * A)
+        upd = jnp.einsum("bh,bhp,bhn->bhpn", dtt.astype(jnp.float32),
+                         xt.astype(jnp.float32), Bt.astype(jnp.float32))
+        st = st * dA[..., None, None] + upd
+        yt = jnp.einsum("bhpn,bhn->bhp", st, Ct.astype(jnp.float32))
+        return st, yt
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          B.transpose(1, 0, 2, 3), C.transpose(1, 0, 2, 3))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), state

@@ -1,0 +1,120 @@
+"""Mamba2 SSD chunked scan — Pallas TPU kernel.
+
+TPU-native structure: the grid is (batch, heads, chunks).  Mosaic runs
+the grid sequentially with the LAST axis innermost, so the inter-chunk
+SSM state lives in VMEM scratch ([P, N] fp32) and flows across the chunk
+iterations of one (b, h) pair — the sequential recurrence costs no HBM
+round-trips (the GPU version writes chunk states to HBM and runs a
+separate scan kernel; on TPU the sequential-grid guarantee makes that
+unnecessary — see DESIGN.md hardware-adaptation notes).
+
+Per chunk the kernel computes, entirely in VMEM:
+    cum      = cumsum(dt * A)                       [Q,1]
+    y_intra  = ((C B^T) ∘ decay ∘ dt) x             [Q,P]  (masked lower-tri)
+    y_inter  = (C ∘ exp(cum)) state^T               [Q,P]
+    state   <- state * exp(cum_Q) + (x ∘ w_last)^T B [P,N]
+
+Block shapes: Q = chunk length (default 128 — MXU-aligned), P = head dim,
+N = SSM state size.  The working set Q*Q + Q*(P+2N) fp32 stays well under
+VMEM for every assigned config (mamba2: P=64, N=128; hymba: P=64, N=16).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref,
+                state_scratch, *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scratch[...] = jnp.zeros_like(state_scratch)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # [Q, P]
+    dt = dt_ref[0].astype(jnp.float32)                 # [Q, 1]
+    A = a_ref[0, 0]                                    # scalar (negative)
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)         # [Q, N]
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)         # [Q, N]
+
+    a = dt * A                                         # [Q, 1]
+    cum = jnp.cumsum(a, axis=0)                        # [Q, 1]
+
+    # intra-chunk: W[i,j] = exp(cum_i - cum_j) * (C_i . B_j) * dt_j, j <= i
+    decay = jnp.exp(cum - cum.reshape(1, chunk))       # [Q, Q]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tri = ii >= jj
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))  # [Q, Q]
+    w = jnp.where(tri, cb * decay, 0.0) * dt.reshape(1, chunk)
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())))     # [Q, P]
+
+    # inter-chunk: y += (C * exp(cum)) @ state^T
+    state = state_scratch[...]                         # [P, N]
+    c_scaled = Cm * jnp.exp(cum)                       # [Q, N]
+    y = y + jax.lax.dot_general(c_scaled, state,
+                                (((1,), (1,)), ((), ())))        # [Q, P]
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # state update: state * exp(cum_Q) + (x ∘ w_last)^T @ B
+    cum_last = cum[chunk - 1]                          # [1]
+    w_last = jnp.exp(cum_last.reshape(1, 1) - cum) * dt           # [Q, 1]
+    xw = x * w_last                                    # [Q, P]
+    new_state = (state * jnp.exp(cum_last)[0]
+                 + jax.lax.dot_general(xw, Bm, (((0,), (0,)), ((), ()))))
+    state_scratch[...] = new_state
+    state_ref[0, 0] = new_state
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+        C: jax.Array, *, chunk: int = DEFAULT_CHUNK,
+        interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.  x: [b,S,H,P]; dt: [b,S,H]; A: [H]; B/C: [b,S,H,N].
+
+    Returns (y [b,S,H,P], final_state [b,H,P,N] fp32).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, max(S, 8))
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S_p = S + pad
+    nc = S_p // chunk
+    a2 = A.reshape(H, 1)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(b, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda i, h, c: (i, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda i, h, c: (i, c, h)),
+            pl.BlockSpec((1, 1), lambda i, h, c: (h, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda i, h, c: (i, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda i, h, c: (i, c, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda i, h, c: (i, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda i, h, c: (i, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, S_p, H, P), x.dtype),
+            jax.ShapeDtypeStruct((b, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a2, B, C)
+    return y[:, :S], state

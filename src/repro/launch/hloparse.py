@@ -1,0 +1,280 @@
+"""Optimized-HLO analysis for the roofline (launch/dryrun.py).
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, so a
+scan-over-layers program under-reports FLOPs/collectives by ~L x.  This
+parser reconstructs trip-count-aware totals directly from
+``compiled.as_text()`` (the per-device, post-SPMD module):
+
+  1. split the module into computations and instructions;
+  2. build the computation call graph (calls= / to_apply= / while
+     body=/condition=) and propagate a multiplier top-down from ENTRY,
+     multiplying by each while's trip count (parsed from the s32
+     constant its condition compares against);
+  3. accumulate per-computation dot FLOPs (2 * prod(result_dims) *
+     prod(contracting_dims), operand shapes resolved from the symbol
+     table) and collective traffic, each scaled by the multiplier.
+
+Collective traffic per op kind (ring algorithms, k = group size):
+  all-reduce        2 * (k-1)/k * result_bytes
+  all-gather        (k-1)/k * result_bytes       (result = gathered)
+  reduce-scatter    (k-1) * result_bytes          (input = k * result)
+  all-to-all        (k-1)/k * result_bytes
+  collective-permute  result_bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_CALLEE_RE = re.compile(r"(?:calls|to_apply|body|condition)=%([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _parse_shape(expr: str) -> Tuple[Optional[Tuple[int, ...]], int]:
+    """First array shape in ``expr`` -> (dims, bytes). Tuples: first leaf."""
+    m = _SHAPE_RE.search(expr)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return None, 0
+    dims = tuple(int(d) for d in m.group(2).split(",") if d) or ()
+    n = _DTYPE_BYTES[m.group(1)]
+    for d in dims:
+        n *= d
+    return dims, n
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    op: str
+    expr: str
+    shape: Optional[Tuple[int, ...]]
+    nbytes: int
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction]
+    symbols: Dict[str, Instruction]
+
+
+_OP_RE = re.compile(r"(?:\(|\s)([a-z][\w\-]*)\(")
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        header = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{", line)
+        if header:
+            cur = Computation(header.group(1), [], {})
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        shape, nbytes = _parse_shape(rhs)
+        opm = _OP_RE.search(" " + rhs)
+        op = opm.group(1) if opm else ""
+        # operands: %names inside the first parens after the op
+        operands = re.findall(r"%([\w.\-]+)", rhs)
+        instr = Instruction(name, op, rhs, shape, nbytes, operands)
+        cur.instructions.append(instr)
+        cur.symbols[name] = instr
+    return comps
+
+
+def _constants(comps: Dict[str, Computation]) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for c in comps.values():
+        for ins in c.instructions:
+            m = re.search(r"constant\((\d+)\)", ins.expr)
+            if m and ins.expr.startswith("s32[]"):
+                out[ins.name] = int(m.group(1))
+    return out
+
+
+def _trip_count(cond_name: str, comps: Dict[str, Computation],
+                consts: Dict[str, int]) -> int:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    # find compare direction=LT; its constant operand is the bound
+    for ins in cond.instructions:
+        if "direction=LT" in ins.expr or ins.op == "compare":
+            for op in ins.operands:
+                if op in consts:
+                    return max(1, consts[op])
+        # fusion-wrapped compare: operands include the constant directly
+        if ins.op == "fusion" and "compare" in ins.expr:
+            for op in ins.operands:
+                if op in consts:
+                    return max(1, consts[op])
+    # fallback: any s32 constant in the cond computation
+    vals = [consts[i.name] for i in cond.instructions if i.name in consts]
+    return max(vals) if vals else 1
+
+
+def _multipliers(comps: Dict[str, Computation], entry: str,
+                 consts: Dict[str, int]) -> Dict[str, float]:
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    seen = set()
+    stack = [entry]
+    while stack:
+        cname = stack.pop()
+        if cname in seen:
+            continue
+        seen.add(cname)
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult[cname]
+        for ins in comp.instructions:
+            callees = _CALLEE_RE.findall(ins.expr)
+            if not callees:
+                continue
+            trip = 1.0
+            if ins.op == "while" or "while(" in ins.expr:
+                condm = re.search(r"condition=%([\w.\-]+)", ins.expr)
+                if condm:
+                    trip = float(_trip_count(condm.group(1), comps, consts))
+            for callee in callees:
+                mult[callee] = max(mult[callee], m * trip)
+                if callee not in seen:
+                    stack.append(callee)
+    return mult
+
+
+def _dot_bytes(ins: Instruction, comp: Computation) -> float:
+    if ins.op != "dot":
+        return 0.0
+    total = float(ins.nbytes)
+    for opnd in ins.operands[:2]:
+        sym = comp.symbols.get(opnd)
+        if sym is not None:
+            total += sym.nbytes
+    return total
+
+
+def _dot_flops(ins: Instruction, comp: Computation) -> float:
+    if ins.op != "dot" or ins.shape is None:
+        return 0.0
+    out = 1.0
+    for d in ins.shape:
+        out *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.expr)
+    contract = 1.0
+    if m and ins.operands:
+        lhs = comp.symbols.get(ins.operands[0])
+        if lhs is not None and lhs.shape is not None:
+            for idx in (int(i) for i in m.group(1).split(",") if i):
+                if idx < len(lhs.shape):
+                    contract *= lhs.shape[idx]
+    return 2.0 * out * contract
+
+
+def _group_size(ins: Instruction, default: int) -> int:
+    m = _GROUPS_RE.search(ins.expr)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _GROUPS_EXPL_RE.search(ins.expr)
+    if m:
+        return max(1, len([x for x in m.group(1).split(",") if x.strip()]))
+    return default
+
+
+def _collective_bytes(ins: Instruction, default_k: int) -> float:
+    kind = next((c for c in COLLECTIVES if ins.op.startswith(c)), None)
+    if kind is None:
+        return 0.0
+    k = _group_size(ins, default_k)
+    b = float(ins.nbytes)
+    if kind == "all-reduce":
+        return 2.0 * (k - 1) / k * b
+    if kind == "all-gather":
+        return (k - 1) / k * b
+    if kind == "reduce-scatter":
+        return (k - 1) * b
+    if kind == "all-to-all":
+        return (k - 1) / k * b
+    return b   # collective-permute
+
+
+@dataclasses.dataclass
+class HloStats:
+    dot_flops: float            # per device, trip-count aware
+    collective_bytes: float     # per device, ring-adjusted, trip-aware
+    collective_counts: Dict[str, int]
+    num_whiles: int
+    collective_bytes_by_kind: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    top_collectives: List[Tuple[float, str]] = dataclasses.field(
+        default_factory=list)
+    # Σ (lhs + rhs + out bytes) over dots, trip-aware: a lower bound on
+    # HBM traffic that, unlike XLA-CPU 'bytes accessed', does not count
+    # the f32 conversion copies the CPU backend inserts around bf16 GEMMs
+    # (TPU MXUs consume bf16 directly).
+    dot_bytes: float = 0.0
+
+
+def analyze(text: str, default_group: int = 1) -> HloStats:
+    comps = parse_module(text)
+    consts = _constants(comps)
+    entry = None
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.MULTILINE)
+    if m:
+        entry = m.group(1)
+    else:  # fall back: computation named like main
+        entry = next((n for n in comps if "main" in n), next(iter(comps)))
+    mult = _multipliers(comps, entry, consts)
+
+    flops = 0.0
+    coll = 0.0
+    dbytes = 0.0
+    counts: Dict[str, int] = defaultdict(int)
+    by_kind: Dict[str, float] = defaultdict(float)
+    top: List[Tuple[float, str]] = []
+    whiles = 0
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        for ins in comp.instructions:
+            if ins.op == "while":
+                whiles += 1
+            flops += m * _dot_flops(ins, comp)
+            dbytes += m * _dot_bytes(ins, comp)
+            cb = _collective_bytes(ins, default_group)
+            if cb:
+                kind = next(c for c in COLLECTIVES if ins.op.startswith(c))
+                coll += m * cb
+                by_kind[kind] += m * cb
+                counts[kind] += int(m)
+                top.append((m * cb, f"{kind} x{m:.0f} {ins.nbytes}B "
+                                    f"in {cname}"))
+    top.sort(reverse=True)
+    return HloStats(dot_flops=flops, collective_bytes=coll,
+                    collective_counts=dict(counts), num_whiles=whiles,
+                    collective_bytes_by_kind=dict(by_kind),
+                    top_collectives=top[:12], dot_bytes=dbytes)

@@ -1,0 +1,61 @@
+"""Render the dry-run artifact into the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src python -m repro.launch.report [artifacts/dryrun.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+
+def fmt_cell(c: Dict) -> str:
+    r = c["roofline"]
+    dom = r["bottleneck"]
+    mem = c["memory"]
+    return (f"| {c['arch']} | {c['shape']} | {c.get('variant') or 'baseline'} "
+            f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | **{dom}** "
+            f"| {r['model_flops_ratio']:.3f} "
+            f"| {mem['args_gb'] + mem['temps_gb']:.1f} "
+            f"| {'yes' if c['fits_hbm'] else 'NO'} |")
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun.json"
+    with open(path) as f:
+        cells = json.load(f)["cells"]
+    ok = [c for c in cells if c.get("status") == "ok"]
+    errs = [c for c in cells if c.get("status") != "ok"]
+
+    print("### Single-pod (16x16 = 256 chips) roofline, per step\n")
+    print("| arch | shape | variant | compute (s) | memory (s) | "
+          "collective (s) | bottleneck | useful FLOP frac | GB/chip | fits |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for c in sorted(ok, key=lambda c: (c["arch"], c["shape"],
+                                       c.get("variant") or "")):
+        if c["mesh"] == "single":
+            print(fmt_cell(c))
+
+    print("\n### Multi-pod (2x16x16 = 512 chips) compile proof\n")
+    print("| arch | shape | variant | compile (s) | GB/chip | fits | "
+          "collective bytes/chip |")
+    print("|---|---|---|---|---|---|---|")
+    for c in sorted(ok, key=lambda c: (c["arch"], c["shape"],
+                                       c.get("variant") or "")):
+        if c["mesh"] == "multi":
+            mem = c["memory"]
+            print(f"| {c['arch']} | {c['shape']} "
+                  f"| {c.get('variant') or 'baseline'} "
+                  f"| {c['compile_s']} "
+                  f"| {mem['args_gb'] + mem['temps_gb']:.1f} "
+                  f"| {'yes' if c['fits_hbm'] else 'NO'} "
+                  f"| {c['hlo']['collective_bytes_per_dev'] / 1e9:.2f}GB |")
+    if errs:
+        print("\n### Errors\n")
+        for c in errs:
+            print(f"- `{c['key']}`: {c['status']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Batched serving driver: prefill + decode with per-layer KV/SSM caches.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m \
+        --batch 4 --prompt-len 16 --decode-steps 24
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.models import Model
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--decode-steps", type=int, default=16)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    arch = get_arch(args.arch)
+    if not args.full:
+        arch = reduced(arch, layers=args.layers)
+    model = Model(arch, dtype=jnp.float32, remat=False)
+    rng = jax.random.PRNGKey(args.seed)
+    params = model.init(rng)
+
+    B = args.batch
+    prompts = jax.random.randint(rng, (B, args.prompt_len), 0,
+                                 arch.vocab_size)
+    max_len = args.prompt_len + args.decode_steps
+    cache = model.init_cache(B, max_len)
+    step = jax.jit(model.decode_step)
+
+    # prefill by teacher-forcing the prompt through the decode path (the
+    # SPMD prefill kernel path is exercised by the dry-run; serving here
+    # demonstrates the cache machinery end to end)
+    t0 = time.perf_counter()
+    logits = None
+    for t in range(args.prompt_len):
+        logits, cache = step(params, prompts[:, t:t + 1], cache, jnp.int32(t))
+    prefill_s = time.perf_counter() - t0
+
+    out_tokens = []
+    tok = jnp.argmax(logits[:, 0], axis=-1)[:, None].astype(jnp.int32)
+    t0 = time.perf_counter()
+    for i in range(args.decode_steps):
+        out_tokens.append(np.asarray(tok[:, 0]))
+        logits, cache = step(params, tok, cache,
+                             jnp.int32(args.prompt_len + i))
+        if args.temperature > 0:
+            rng, k = jax.random.split(rng)
+            tok = jax.random.categorical(
+                k, logits[:, 0] / args.temperature)[:, None].astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits[:, 0], axis=-1)[:, None].astype(jnp.int32)
+    decode_s = time.perf_counter() - t0
+    toks = np.stack(out_tokens, axis=1)
+    print(f"[serve] batch={B} prefill={prefill_s * 1e3:.1f}ms "
+          f"decode={decode_s / args.decode_steps * 1e3:.2f}ms/token")
+    print(f"[serve] sample continuation (request 0): {toks[0][:16].tolist()}")
+    assert np.isfinite(np.asarray(logits)).all()
+    return {"tokens": toks, "ms_per_token": decode_s / args.decode_steps * 1e3}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""ShapeDtypeStruct stand-ins for every model input/state — the dry-run
+lowers against these; nothing is ever allocated.
+
+``input_specs(arch, shape)`` returns the step arguments for the cell's
+kind: train -> (params, opt_state, batch); prefill -> (params, batch);
+decode -> (params, token, cache, pos).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import Model
+from repro.optim import adamw
+
+
+def params_shape(model: Model) -> Any:
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def opt_shape(model: Model, pshape: Any) -> Any:
+    return jax.eval_shape(adamw.init, pshape)
+
+
+def batch_specs(arch: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B = shape.global_batch
+    S_text = shape.seq_len - (arch.frontend_tokens if arch.frontend else 0)
+    out = {
+        "tokens": jax.ShapeDtypeStruct((B, S_text), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S_text), jnp.int32),
+    }
+    if arch.frontend:
+        out["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (B, arch.frontend_tokens, arch.d_model), jnp.bfloat16)
+    return out
+
+
+def prefill_specs(arch: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    out = batch_specs(arch, shape)
+    del out["labels"]
+    return out
+
+
+def cache_shape(model: Model, shape: ShapeConfig) -> Any:
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+
+
+def decode_specs(arch: ArchConfig, shape: ShapeConfig, model: Model
+                 ) -> Tuple[Any, Any, Any]:
+    token = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    cache = cache_shape(model, shape)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return token, cache, pos

@@ -1,0 +1,122 @@
+"""End-to-end resilient training driver (deliverable b).
+
+Runs REAL training (forward/backward/optimizer on actual arrays) through
+the Oobleck stack: planner -> templates -> heterogeneous pipeline
+instances -> 1F1B execution -> layer-granular sync -> AdamW, with
+failure injection, recovery-from-replicas, checkpointing, and restart.
+
+Container-friendly: uses a reduced config by default (--full to use the
+exact assigned config — sized for the production mesh, not a CPU).
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch glm4-9b --nodes 5 --f 1 --steps 6 --kill-at 3
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import CheckpointManager, TrainState
+from repro.configs import get_arch, reduced
+from repro.core import EngineConfig, OobleckEngine, build_profile
+from repro.data import ByteCorpus, GlobalBatchDispenser, SyntheticLM
+
+_TEXT = (b"Oobleck enables resilient distributed training of large models "
+         b"with guaranteed fault tolerance using pipeline templates. "
+         b"It instantiates f+1 logically equivalent heterogeneous pipeline "
+         b"replicas and recovers from failures by copying model states "
+         b"from surviving replicas instead of restarting from checkpoints. ")
+from repro.models import Model
+from repro.optim import adamw
+from repro.runtime import HeteroTrainer
+
+
+def microbatches(batch, mb_size):
+    n = batch["tokens"].shape[0] // mb_size
+    return [{k: v[i * mb_size:(i + 1) * mb_size] for k, v in batch.items()
+             if not k.startswith("_")} for i in range(n)]
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt3-medium")
+    ap.add_argument("--nodes", type=int, default=5)
+    ap.add_argument("--f", type=int, default=1)
+    ap.add_argument("--n0", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=6)
+    ap.add_argument("--global-batch", type=int, default=16)
+    ap.add_argument("--microbatch", type=int, default=2)
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--kill-at", type=int, default=-1,
+                    help="inject a node failure before this step")
+    ap.add_argument("--join-at", type=int, default=-1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    arch = get_arch(args.arch)
+    if not args.full:
+        arch = reduced(arch, layers=args.layers)
+    model = Model(arch, dtype=jnp.float32, remat=False, attn_impl="naive",
+                  scan_layers=False)
+    params = model.init(jax.random.PRNGKey(args.seed))
+
+    profile = build_profile(arch, microbatch=args.microbatch,
+                            seq_len=args.seq_len)
+    nodes = [f"node{i}" for i in range(args.nodes)]
+    engine = OobleckEngine(profile, nodes, EngineConfig(
+        fault_tolerance=args.f, global_batch=args.global_batch,
+        microbatch=args.microbatch, gpus_per_node=1, n0_override=args.n0))
+    print(f"[plan] templates={list(engine.templates)} "
+          f"pipelines={[i.template.num_nodes for i in engine.instances]} "
+          f"microbatches={engine.batch.num_microbatches}")
+
+    opt_cfg = adamw.AdamWConfig(lr=3e-3, warmup_steps=0, weight_decay=0.0)
+    trainer = HeteroTrainer(model, engine, params, opt_cfg)
+    source = ByteCorpus(_TEXT * 50, seq_len=args.seq_len)
+    disp = GlobalBatchDispenser(source)
+    mgr = None
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir, num_layers=arch.num_layers)
+
+    losses = []
+    joined = 0
+    for step in range(args.steps):
+        if step == args.kill_at:
+            victim = engine.instances[0].nodes[-1]
+            t0 = time.perf_counter()
+            info = trainer.handle_failure({victim})
+            print(f"[fail] killed {victim}: recovered from replicas in "
+                  f"{time.perf_counter() - t0:.2f}s "
+                  f"(copied {info['copied_bytes'] / 1e6:.0f}MB of state), "
+                  f"pipelines={[i.template.num_nodes for i in engine.instances]}")
+        if step == args.join_at:
+            raise SystemExit("join-at requires the elastic example; see "
+                             "examples/spot_trace_replay.py")
+        batches = disp.next_step(engine.batch.minibatch_sizes())
+        out = trainer.train_step(
+            [microbatches(b, args.microbatch) for b in batches])
+        losses.append(out["loss"])
+        print(f"[step {step}] loss={out['loss']:.4f} "
+              f"pipelines={out['num_pipelines']} "
+              f"divergence={trainer.replica_divergence():.2e}")
+        if mgr and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+            full = trainer.full_params()
+            mgr.save(TrainState(step + 1, full, adamw.init(full),
+                                disp.state(), args.seed))
+    if mgr:
+        mgr.wait()
+    assert losses[-1] < losses[0], "training must reduce the loss"
+    print(f"[done] loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    return {"losses": losses}
+
+
+if __name__ == "__main__":
+    main()

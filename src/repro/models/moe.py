@@ -1,0 +1,182 @@
+"""Mixture-of-Experts MLP: top-k routed experts + optional shared expert.
+
+Dense dispatch formulation: every expert computes on every token and a
+top-k routing weight matrix selects contributions.  This is
+mathematically exact, XLA-friendly, trivially expert-parallel (shard the
+expert axis of the stacked weights over the ``model``/``expert`` mesh
+axis), and avoids data-dependent shapes (no capacity dropping), matching
+dropless-MoE semantics.  The load-balancing auxiliary loss follows the
+standard switch-transformer form.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import init_mlp, mlp
+
+
+def init_moe(rng, arch: ArchConfig, dtype=jnp.float32):
+    m = arch.moe
+    d, ff = arch.d_model, arch.d_ff
+    ks = jax.random.split(rng, 5)
+    s_in, s_out = d ** -0.5, ff ** -0.5
+    p = {
+        "router": jax.random.normal(ks[0], (d, m.num_experts), jnp.float32) * s_in,
+        "gate": jax.random.normal(ks[1], (m.num_experts, d, ff), dtype) * s_in,
+        "up": jax.random.normal(ks[2], (m.num_experts, d, ff), dtype) * s_in,
+        "down": jax.random.normal(ks[3], (m.num_experts, ff, d), dtype) * s_out,
+    }
+    if m.shared_expert_d_ff:
+        p["shared"] = init_mlp(ks[4], d, m.shared_expert_d_ff, "swiglu", dtype)
+    return p
+
+
+def moe_mlp(params, arch: ArchConfig, x: jax.Array
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: [b,S,d] -> (y, aux_loss)."""
+    m = arch.moe
+    b, S, d = x.shape
+    logits = (x.astype(jnp.float32) @ params["router"])          # [b,S,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, m.top_k)                 # [b,S,k]
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+    # dense routing weights: [b,S,E]
+    route = jnp.zeros_like(probs).at[
+        jnp.arange(b)[:, None, None],
+        jnp.arange(S)[None, :, None],
+        top_i].set(top_w)
+    route = route.astype(x.dtype)
+
+    h = jax.nn.silu(jnp.einsum("bsd,edf->bsef", x, params["gate"].astype(x.dtype)))
+    h = h * jnp.einsum("bsd,edf->bsef", x, params["up"].astype(x.dtype))
+    y = jnp.einsum("bsef,efd->bsed", h, params["down"].astype(x.dtype))
+    y = jnp.einsum("bsed,bse->bsd", y, route)
+
+    if "shared" in params:
+        y = y + mlp(params["shared"], x, "swiglu")
+
+    # load-balance aux: E * sum_e (fraction routed to e) * (mean prob of e)
+    ones = jnp.zeros_like(probs).at[
+        jnp.arange(b)[:, None, None],
+        jnp.arange(S)[None, :, None],
+        top_i].set(1.0)
+    frac = jnp.mean(ones, axis=(0, 1)) / m.top_k
+    imp = jnp.mean(probs, axis=(0, 1))
+    aux = m.num_experts * jnp.sum(frac * imp)
+    return y, aux
+
+
+def moe_mlp_capacity(params, arch: ArchConfig, x: jax.Array, *,
+                     capacity_factor: float = 1.25,
+                     group_size: int = 1024,
+                     scan_groups: bool = True
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """GShard/Switch-style capacity dispatch — the production path.
+
+    Tokens are processed in groups of ``group_size`` (lax.scan), each
+    expert takes at most C = ceil(top_k * G / E * capacity_factor)
+    tokens per group (overflow dropped, standard dropless-approximation
+    trade-off).  Peak memory per group is O(G*E*C one-hot + E*C*ff),
+    independent of sequence length — dense dispatch's O(T*E*ff) is
+    infeasible at train_4k scale.  FLOPs ≈ capacity_factor * active
+    FLOPs, so the roofline's useful-compute ratio stays honest.
+    """
+    m = arch.moe
+    b, S, d = x.shape
+    # groups are (batch row, sequence chunk): the batch dim stays a BATCH
+    # dimension of every einsum, so GSPMD keeps it sharded — flattening
+    # b*s into global groups would force each device to compute whole
+    # groups redundantly (catastrophic at 256-way batch sharding).
+    gs = min(group_size, S)
+    pad = (-S) % gs
+    if pad:
+        x_in = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    else:
+        x_in = x
+    ng = (S + pad) // gs
+    C = max(1, int(math.ceil(m.top_k * gs / m.num_experts * capacity_factor)))
+
+    wg = params["gate"].astype(x.dtype)
+    wu = params["up"].astype(x.dtype)
+    wd = params["down"].astype(x.dtype)
+    router = params["router"]
+
+    def group(carry, xg):                      # xg: [B, gs, d]
+        logits = jnp.einsum("bgd,de->bge", xg.astype(jnp.float32), router)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_w, top_i = jax.lax.top_k(probs, m.top_k)       # [b, gs, k]
+        top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+        # position of each (token, k) within its expert's queue (per b)
+        onehot = jax.nn.one_hot(top_i, m.num_experts,
+                                dtype=jnp.float32)          # [b, gs, k, E]
+        flat = onehot.reshape(-1, gs * m.top_k, m.num_experts)
+        pos = jnp.cumsum(flat, axis=1) * flat - 1.0
+        keep = (pos >= 0) & (pos < C)
+        pos_c = jax.nn.one_hot(
+            pos.reshape(-1, gs, m.top_k, m.num_experts),
+            C, dtype=x.dtype)                               # [b,gs,k,E,C]
+        pos_c = pos_c * keep.reshape(-1, gs, m.top_k, m.num_experts, 1)
+        dispatch = jnp.einsum("bgkec->bgec", pos_c)
+        combine = jnp.einsum("bgkec,bgk->bgec", pos_c,
+                             top_w.astype(x.dtype))
+        xe = jnp.einsum("bgd,bgec->becd", xg, dispatch)     # [b, E, C, d]
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, wg))
+        h = h * jnp.einsum("becd,edf->becf", xe, wu)
+        ye = jnp.einsum("becf,efd->becd", h, wd)
+        yg = jnp.einsum("becd,bgec->bgd", ye, combine)
+        frac = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1)) / m.top_k
+        imp = jnp.mean(probs, axis=(0, 1))
+        aux_g = m.num_experts * jnp.sum(frac * imp)
+        return carry + aux_g, yg
+
+    if scan_groups:
+        xs = x_in.reshape(b, ng, gs, d).transpose(1, 0, 2, 3)
+        aux, ys = jax.lax.scan(group, jnp.zeros(()), xs)
+        y = ys.transpose(1, 0, 2, 3).reshape(b, S + pad, d)[:, :S]
+        aux = aux / ng
+    else:
+        # vectorized: (b, group) fold into one batch dim — a lax.scan's
+        # leading axis cannot stay sharded, so under sequence parallelism
+        # the scan forces per-step gathers; vectorizing keeps every dim
+        # sharded (used by the perf-optimized prefill path, §Perf).
+        xg = x_in.reshape(b * ng, gs, d)
+        aux, y = group(jnp.zeros(()), xg)
+        y = y.reshape(b, S + pad, d)[:, :S]
+    if "shared" in params:
+        y = y + mlp(params["shared"], x, "swiglu")
+    return y, aux
+
+
+def moe_mlp_grouped(params, arch: ArchConfig, x: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Top-k gather formulation: compute only the k selected experts per
+    token via one-hot matmul gather of expert weights.  FLOPs scale with
+    k instead of E — the serving-path variant (beyond-paper optimization,
+    see EXPERIMENTS.md §Perf)."""
+    m = arch.moe
+    b, S, d = x.shape
+    logits = (x.astype(jnp.float32) @ params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, m.top_k)
+    top_w = (top_w / jnp.sum(top_w, axis=-1, keepdims=True)).astype(x.dtype)
+
+    onehot = jax.nn.one_hot(top_i, m.num_experts, dtype=x.dtype)  # [b,S,k,E]
+    wg = jnp.einsum("bske,edf->bskdf", onehot, params["gate"].astype(x.dtype))
+    wu = jnp.einsum("bske,edf->bskdf", onehot, params["up"].astype(x.dtype))
+    wd = jnp.einsum("bske,efd->bskfd", onehot, params["down"].astype(x.dtype))
+    h = jax.nn.silu(jnp.einsum("bsd,bskdf->bskf", x, wg))
+    h = h * jnp.einsum("bsd,bskdf->bskf", x, wu)
+    y = jnp.einsum("bskf,bskfd->bskd", h, wd)
+    y = jnp.einsum("bskd,bsk->bsd", y, top_w)
+    if "shared" in params:
+        y = y + mlp(params["shared"], x, "swiglu")
+    ones = jax.nn.one_hot(top_i, m.num_experts, dtype=jnp.float32)
+    frac = jnp.mean(jnp.sum(ones, axis=2), axis=(0, 1)) / m.top_k
+    imp = jnp.mean(probs, axis=(0, 1))
+    aux = m.num_experts * jnp.sum(frac * imp)
+    return y, aux

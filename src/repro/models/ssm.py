@@ -1,0 +1,246 @@
+"""Mamba2 block built on SSD (state-space duality, arXiv:2405.21060).
+
+Three numerically-equivalent SSD evaluators:
+  * ``ssd_scan``    — per-timestep lax.scan recurrence; the oracle.
+  * ``ssd_chunked`` — the SSD chunked algorithm (intra-chunk quadratic +
+    inter-chunk state recurrence); the training/prefill path and the
+    reference for kernels/ssd.py (Pallas).
+  * ``ssd_step``    — one-token decode against a carried state.
+
+State layout is [batch, heads, head_dim(P), state(N)] throughout.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.models.layers import rms_norm
+
+
+# ----------------------------------------------------------------------
+# SSD evaluators
+# ----------------------------------------------------------------------
+def ssd_scan(x, dt, A, B, C, state=None):
+    """Oracle recurrence.
+
+    x: [b,S,H,P] dt: [b,S,H] (post-softplus) A: [H] (negative)
+    B, C: [b,S,H,N] (already expanded per head)
+    returns y: [b,S,H,P], final state [b,H,P,N].
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    if state is None:
+        state = jnp.zeros((b, H, P, N), jnp.float32)
+
+    def step(st, inp):
+        xt, dtt, Bt, Ct = inp
+        dA = jnp.exp(dtt * A)                                   # [b,H]
+        upd = jnp.einsum("bh,bhp,bhn->bhpn", dtt, xt, Bt)
+        st = st * dA[..., None, None] + upd.astype(jnp.float32)
+        yt = jnp.einsum("bhpn,bhn->bhp", st.astype(xt.dtype), Ct)
+        return st, yt
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          B.transpose(1, 0, 2, 3), C.transpose(1, 0, 2, 3))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3), state
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, state=None):
+    """Chunked SSD (same signature/returns as ssd_scan).
+
+    Structured as a lax.scan over chunks — the inter-chunk recurrence is
+    sequential anyway, and scanning keeps peak memory at ONE chunk's
+    intra buffers (O(Q^2 * H)) instead of all of them (O(S/Q * Q^2 * H)),
+    which is what makes 32k/500k sequence lowering feasible.  This is
+    also exactly the Pallas kernel's structure (kernels/ssd.py).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S_p = S + pad
+    nc = S_p // chunk
+    # chunk-major for scan: [c, b, Q, ...]
+    xc = x.reshape(b, nc, chunk, H, P).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(b, nc, chunk, H).transpose(1, 0, 2, 3)
+    Bc = B.reshape(b, nc, chunk, H, N).transpose(1, 0, 2, 3, 4)
+    Cc = C.reshape(b, nc, chunk, H, N).transpose(1, 0, 2, 3, 4)
+    ii = jnp.arange(chunk)
+    causal = (ii[:, None] >= ii[None, :])[None, :, :, None]  # [1,i,j,1]
+    if state is None:
+        state = jnp.zeros((b, H, P, N), jnp.float32)
+
+    def step(st, inp):
+        xq, dtq, Bq, Cq = inp           # [b,Q,H,P], [b,Q,H], [b,Q,H,N] x2
+        a = (dtq * A).astype(jnp.float32)
+        cum = jnp.cumsum(a, axis=1)     # [b,Q,h]
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])
+        M = jnp.where(causal, decay, 0.0)
+        CB = jnp.einsum("bihn,bjhn->bijh", Cq, Bq).astype(jnp.float32)
+        W = CB * M * dtq[:, None, :, :]
+        y = jnp.einsum("bijh,bjhp->bihp", W.astype(xq.dtype), xq)
+        # contribution of the incoming state
+        y = y + jnp.einsum("bihn,bhpn->bihp",
+                           (Cq.astype(jnp.float32)
+                            * jnp.exp(cum)[..., None]).astype(xq.dtype),
+                           st.astype(xq.dtype))
+        # state update
+        w_last = jnp.exp(cum[:, -1:, :] - cum) * dtq
+        cs = jnp.einsum("bjh,bjhn,bjhp->bhpn",
+                        w_last.astype(xq.dtype), Bq, xq).astype(jnp.float32)
+        st = st * jnp.exp(cum[:, -1, :])[..., None, None] + cs
+        return st, y
+
+    state, ys = jax.lax.scan(step, state, (xc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, S_p, H, P)
+    return y[:, :S], state
+
+
+def ssd_step(xt, dtt, A, Bt, Ct, state):
+    """One decode step. xt: [b,H,P], dtt: [b,H], Bt/Ct: [b,H,N]."""
+    dA = jnp.exp(dtt * A)
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dtt, xt, Bt)
+    state = state * dA[..., None, None] + upd.astype(jnp.float32)
+    yt = jnp.einsum("bhpn,bhn->bhp", state.astype(xt.dtype), Ct)
+    return yt, state
+
+
+# ----------------------------------------------------------------------
+# Causal depthwise conv1d
+# ----------------------------------------------------------------------
+def causal_conv1d(x, weight, bias):
+    """x: [b,S,dim]; weight: [width, dim]; bias: [dim]."""
+    width = weight.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, weight[:, None, :].astype(x.dtype), (1,), "VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return jax.nn.silu(out + bias.astype(x.dtype))
+
+
+def conv_step(xt, conv_state, weight, bias):
+    """xt: [b,dim]; conv_state: [b,width-1,dim] (previous inputs)."""
+    window = jnp.concatenate([conv_state, xt[:, None, :]], axis=1)
+    out = jnp.einsum("bwd,wd->bd", window.astype(jnp.float32),
+                     weight.astype(jnp.float32)).astype(xt.dtype)
+    out = jax.nn.silu(out + bias.astype(xt.dtype))
+    return out, window[:, 1:]
+
+
+# ----------------------------------------------------------------------
+# Mamba2 block
+# ----------------------------------------------------------------------
+def _dims(arch: ArchConfig):
+    c = arch.ssm
+    d_inner = c.expand * arch.d_model
+    n_heads = d_inner // c.head_dim
+    conv_dim = d_inner + 2 * c.n_groups * c.state_size
+    return c, d_inner, n_heads, conv_dim
+
+
+def init_mamba(rng, arch: ArchConfig, dtype=jnp.float32):
+    c, d_inner, n_heads, conv_dim = _dims(arch)
+    d = arch.d_model
+    ks = jax.random.split(rng, 5)
+    in_dim = 2 * d_inner + 2 * c.n_groups * c.state_size + n_heads
+    dt = jnp.exp(jax.random.uniform(ks[2], (n_heads,), jnp.float32,
+                                    jnp.log(1e-3), jnp.log(1e-1)))
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, in_dim), dtype) * d ** -0.5,
+        "conv_w": jax.random.normal(ks[1], (c.conv_width, conv_dim), dtype) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(dt)).astype(dtype),      # inv-softplus
+        "A_log": jnp.log(jax.random.uniform(ks[3], (n_heads,), jnp.float32,
+                                            1.0, 16.0)).astype(dtype),
+        "D": jnp.ones((n_heads,), dtype),
+        "norm_w": jnp.ones((d_inner,), dtype),
+        "out_proj": jax.random.normal(ks[4], (d_inner, d), dtype) * d_inner ** -0.5,
+    }
+
+
+def _split_proj(arch: ArchConfig, proj):
+    c, d_inner, n_heads, _ = _dims(arch)
+    gn = c.n_groups * c.state_size
+    z, xbc_dt = jnp.split(proj, [d_inner], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_inner + 2 * gn], axis=-1)
+    return z, xbc, dt
+
+
+def _expand_groups(t, n_heads, n_groups):
+    """[b, ..., G, N] -> [b, ..., H, N] by repeating each group."""
+    reps = n_heads // n_groups
+    return jnp.repeat(t, reps, axis=-2)
+
+
+def mamba(params, arch: ArchConfig, x: jax.Array, *,
+          evaluator: str = "chunked") -> jax.Array:
+    """Full-sequence Mamba2 block. x: [b,S,d_model]."""
+    c, d_inner, n_heads, conv_dim = _dims(arch)
+    b, S, _ = x.shape
+    proj = x @ params["in_proj"].astype(x.dtype)
+    z, xbc, dt_raw = _split_proj(arch, proj)
+    xbc = causal_conv1d(xbc, params["conv_w"], params["conv_b"])
+    gn = c.n_groups * c.state_size
+    xin, B, C = jnp.split(xbc, [d_inner, d_inner + gn], axis=-1)
+    xh = xin.reshape(b, S, n_heads, c.head_dim)
+    Bh = _expand_groups(B.reshape(b, S, c.n_groups, c.state_size), n_heads, c.n_groups)
+    Ch = _expand_groups(C.reshape(b, S, c.n_groups, c.state_size), n_heads, c.n_groups)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    if evaluator == "chunked":
+        y, _ = ssd_chunked(xh, dt, A, Bh, Ch, chunk=c.chunk_size)
+    elif evaluator == "kernel":
+        from repro.kernels import ops as kops
+        y, _ = kops.ssd(xh, dt, A, Bh, Ch, chunk=c.chunk_size)
+    else:
+        y, _ = ssd_scan(xh, dt, A, Bh, Ch)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(b, S, d_inner)
+    y = rms_norm(params["norm_w"].astype(x.dtype), y * jax.nn.silu(z),
+                 arch.rms_norm_eps)
+    return y @ params["out_proj"].astype(x.dtype)
+
+
+def init_mamba_cache(arch: ArchConfig, batch: int, dtype):
+    c, d_inner, n_heads, conv_dim = _dims(arch)
+    return {
+        "conv": jnp.zeros((batch, c.conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, n_heads, c.head_dim, c.state_size),
+                         jnp.float32),
+    }
+
+
+def mamba_decode(params, arch: ArchConfig, x: jax.Array, cache: Dict
+                 ) -> Tuple[jax.Array, Dict]:
+    """One-token decode. x: [b,1,d_model]."""
+    c, d_inner, n_heads, _ = _dims(arch)
+    b = x.shape[0]
+    proj = (x[:, 0] @ params["in_proj"].astype(x.dtype))
+    z, xbc, dt_raw = _split_proj(arch, proj)
+    xbc, conv_state = conv_step(xbc, cache["conv"], params["conv_w"],
+                                params["conv_b"])
+    gn = c.n_groups * c.state_size
+    xin, B, C = jnp.split(xbc, [d_inner, d_inner + gn], axis=-1)
+    xh = xin.reshape(b, n_heads, c.head_dim)
+    Bh = _expand_groups(B.reshape(b, c.n_groups, c.state_size), n_heads, c.n_groups)
+    Ch = _expand_groups(C.reshape(b, c.n_groups, c.state_size), n_heads, c.n_groups)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, ssm_state = ssd_step(xh, dt, A, Bh, Ch, cache["ssm"])
+    y = y + params["D"].astype(y.dtype)[None, :, None] * xh
+    y = y.reshape(b, d_inner)
+    y = rms_norm(params["norm_w"].astype(x.dtype), y * jax.nn.silu(z),
+                 arch.rms_norm_eps)
+    out = (y @ params["out_proj"].astype(x.dtype))[:, None, :]
+    return out, {"conv": conv_state, "ssm": ssm_state}

@@ -1,0 +1,4 @@
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig, AdamWState
+
+__all__ = ["adamw", "AdamWConfig", "AdamWState"]

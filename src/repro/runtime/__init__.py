@@ -1,0 +1,8 @@
+from repro.runtime.pipeline import HeteroTrainer, split_into_layers
+from repro.runtime.schedule import (flat_schedule, one_f_one_b,
+                                    simulate_makespan)
+from repro.runtime.sharding import ShardingStrategy
+from repro.runtime import spmd
+
+__all__ = ["HeteroTrainer", "split_into_layers", "flat_schedule",
+           "one_f_one_b", "simulate_makespan", "ShardingStrategy", "spmd"]

@@ -1,0 +1,77 @@
+"""Gradient compression for the cross-pipeline sync path (optional).
+
+Heterogeneous-pipeline sync rides layer buckets (core/sync.py); when the
+sync peers span pods the traffic crosses DCN (25 GB/s vs 50 GB/s ICI), so
+Oobleck-at-scale benefits from compressing buckets before the all-reduce.
+Two codecs:
+
+  * ``bf16``  — cast fp32 grads to bf16 (2x, error ~1e-3 relative);
+  * ``int8``  — per-bucket symmetric quantization with an fp32 scale
+    (4x, stochastic-rounding-free deterministic variant).
+
+Both are used with error feedback (the residual is carried and added to
+the next step's gradient), which keeps convergence unbiased in
+expectation; tests verify the codec roundtrip error bound and that error
+feedback sums to the true gradient over time.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress(tree: Any, codec: str) -> Any:
+    if codec == "none":
+        return tree
+    if codec == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.bfloat16), tree)
+    if codec == "int8":
+        def enc(g):
+            scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+            q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+            return {"q": q, "scale": scale}
+        return jax.tree.map(enc, tree)
+    raise ValueError(f"unknown codec {codec!r}")
+
+
+def decompress(tree: Any, codec: str) -> Any:
+    if codec == "none":
+        return tree
+    if codec == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.float32), tree)
+    if codec == "int8":
+        def dec(d):
+            return d["q"].astype(jnp.float32) * d["scale"]
+        return jax.tree.map(dec, tree, is_leaf=lambda x: isinstance(x, dict)
+                            and "q" in x)
+    raise ValueError(f"unknown codec {codec!r}")
+
+
+def roundtrip(tree: Any, codec: str) -> Any:
+    return decompress(compress(tree, codec), codec)
+
+
+class ErrorFeedback:
+    """Carries the compression residual into the next step's gradient."""
+
+    def __init__(self, codec: str):
+        self.codec = codec
+        self.residual: Optional[Any] = None
+
+    def apply(self, grads: Any) -> Any:
+        if self.codec == "none":
+            return grads
+        if self.residual is not None:
+            grads = jax.tree.map(jnp.add, grads, self.residual)
+        sent = roundtrip(grads, self.codec)
+        self.residual = jax.tree.map(jnp.subtract, grads, sent)
+        return sent
+
+
+def wire_bytes(tree: Any, codec: str) -> int:
+    """Bytes on the wire for one bucket under the codec."""
+    leaves = jax.tree.leaves(tree)
+    n = sum(l.size for l in leaves)
+    return {"none": 4 * n, "bf16": 2 * n, "int8": n + 4 * len(leaves)}[codec]

@@ -1,0 +1,325 @@
+"""Heterogeneous pipeline execution engine (paper §6) at array level.
+
+Each PipelineInstance from the core engine is bound to concrete arrays:
+every stage holds ONLY its layers' params + Adam moments (layer-indexed,
+the paper's unit of state).  A training step:
+
+  1. per pipeline: run the 1F1B schedule with per-microbatch jax.vjp
+     chains (forward activations / backward cotangents hop between
+     stages), accumulating per-layer gradients;
+  2. cross-pipeline sync at LAYER granularity (Figure 9): a weighted
+     average over replicas, weights = minibatch sizes, so the result is
+     exactly the global-batch mean gradient;
+  3. identical AdamW update on every replica of every layer — replicas
+     stay bit-identical, which is what makes step 4 sound;
+  4. on failure: the core engine reinstantiates pipelines from templates
+     and emits a copy plan; we rebuild stage arrays by copying layer
+     states (params AND moments) from surviving replicas — recovery
+     without any checkpoint, the paper's headline mechanism.
+
+This path runs real heterogeneous sets (different stage counts per
+pipeline) — the thing single-program SPMD cannot express; the SPMD fast
+path (runtime/spmd.py) covers the homogeneous zero-failure case.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.engine import OobleckEngine
+from repro.core.reconfigure import PipelineInstance
+from repro.models import Model
+from repro.models.layers import cross_entropy, embed, unembed
+from repro.optim import adamw
+from repro.runtime.schedule import flat_schedule
+
+LayerState = Dict[str, Any]     # {"p": params, "m": moment1, "v": moment2}
+
+
+# ----------------------------------------------------------------------
+# Canonical layer-indexed parameter view
+# ----------------------------------------------------------------------
+def split_into_layers(model: Model, params: Dict) -> List[Dict]:
+    """Full param tree -> [embed, block_0..block_{L-1}, head] per the
+    cost-model layer indexing (embed = layer 0, head = layer L+1).
+
+    Tied-embedding models are AUTO-UNTIED here: pipeline stages own
+    disjoint layer sets, so the head stage gets its own copy of the
+    table (trained independently thereafter).  This is the standard
+    pipeline-parallel treatment when first/last stages differ.
+    """
+    L = model.arch.num_layers
+    layers: List[Dict] = [{"embed": params["embed"]}]
+    for i in range(L):
+        layers.append(jax.tree.map(lambda t: t[i], params["blocks"]))
+    tail = {"final_norm": params["final_norm"]}
+    tail["head"] = params.get("head", jax.tree.map(jnp.copy, params["embed"]))
+    layers.append(tail)
+    return layers
+
+
+def zeros_like_tree(tree):
+    return jax.tree.map(lambda t: jnp.zeros_like(t, dtype=jnp.float32), tree)
+
+
+# ----------------------------------------------------------------------
+# Stage program
+# ----------------------------------------------------------------------
+def make_stage_fn(model: Model, kinds: Sequence[str]) -> Callable:
+    """Stage program over its layer list.  Signature:
+    fn(layer_params, carry, labels, fe) -> carry' | (loss, metrics)
+    carry = (x, aux) with x = tokens for the first stage."""
+    arch = model.arch
+
+    def fn(layer_params: List[Dict], carry, labels, fe):
+        x, aux = carry
+        for kind, lp in zip(kinds, layer_params):
+            if kind == "embed":
+                x = embed(lp["embed"], x, model.dtype)
+                if fe is not None:
+                    x = jnp.concatenate([fe.astype(model.dtype), x], axis=1)
+            elif kind == "block":
+                x, aux = model.block(lp, x, aux)
+            else:  # head
+                x = model._norm(lp["final_norm"], x)
+                logits = unembed(lp["head"], x)
+                ft = logits.shape[1] - labels.shape[1]
+                if ft:
+                    logits = logits[:, ft:]
+                nll = cross_entropy(logits[:, :-1], labels[:, 1:])
+                coef = (arch.moe.router_aux_loss_coef
+                        if arch.moe is not None else 0.0)
+                return nll + coef * aux, nll
+        return x, aux
+    return fn
+
+
+# ----------------------------------------------------------------------
+# One bound pipeline
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class PipelineRun:
+    instance: PipelineInstance
+    # per stage: list of layer ids and their states
+    stage_layers: List[List[int]]
+    states: Dict[int, LayerState]          # layer id -> state (this replica)
+    stage_fns: List[Callable]
+
+    @property
+    def num_stages(self) -> int:
+        return len(self.stage_layers)
+
+    def stage_params(self, s: int) -> List[Dict]:
+        return [self.states[l]["p"] for l in self.stage_layers[s]]
+
+
+class HeteroTrainer:
+    """Drives N heterogeneous pipeline replicas through train steps and
+    failure recovery, using the core engine for all planning."""
+
+    def __init__(self, model: Model, engine: OobleckEngine,
+                 params: Dict, opt_cfg: adamw.AdamWConfig):
+        self.model = model
+        self.engine = engine
+        self.opt_cfg = opt_cfg
+        self.opt_step = jnp.zeros((), jnp.int32)
+        layers = split_into_layers(model, params)
+        self.num_layers = len(layers)
+        self._kind = (["embed"] + ["block"] * model.arch.num_layers
+                      + ["head"])
+        self.runs: List[PipelineRun] = [
+            self._bind(inst, layers) for inst in engine.instances]
+
+    # ------------------------------------------------------------------
+    def _bind(self, inst: PipelineInstance, layers: List[Dict],
+              source_states: Optional[Dict[int, LayerState]] = None
+              ) -> PipelineRun:
+        stage_layers = [list(range(st.layer_start, st.layer_end))
+                        for st in inst.template.stages]
+        states: Dict[int, LayerState] = {}
+        for lids in stage_layers:
+            for l in lids:
+                if source_states is not None and l in source_states:
+                    src = source_states[l]
+                    states[l] = {"p": jax.tree.map(jnp.copy, src["p"]),
+                                 "m": jax.tree.map(jnp.copy, src["m"]),
+                                 "v": jax.tree.map(jnp.copy, src["v"])}
+                else:
+                    p = layers[l]
+                    states[l] = {"p": jax.tree.map(jnp.asarray, p),
+                                 "m": zeros_like_tree(p),
+                                 "v": zeros_like_tree(p)}
+        fns = [make_stage_fn(self.model, [self._kind[l] for l in lids])
+               for lids in stage_layers]
+        return PipelineRun(inst, stage_layers, states, fns)
+
+    # ------------------------------------------------------------------
+    # One pipeline's 1F1B iteration -> per-layer grads + mean loss
+    # ------------------------------------------------------------------
+    def _run_pipeline(self, run: PipelineRun, microbatches: List[Dict]
+                      ) -> Tuple[Dict[int, Any], float]:
+        S = run.num_stages
+        M = len(microbatches)
+        sched = flat_schedule(S, M)
+        acts: Dict[Tuple[int, int], Any] = {}
+        cots: Dict[Tuple[int, int], Any] = {}
+        vjps: Dict[Tuple[int, int], Any] = {}
+        gsum: List[Any] = [None] * S
+        losses: List[float] = []
+
+        for (s, op, mb) in sched:
+            batch = microbatches[mb]
+            labels = jnp.asarray(batch["labels"])
+            fe = batch.get("frontend_embeds")
+            fe = jnp.asarray(fe) if fe is not None else None
+            if op == "F":
+                if s == 0:
+                    carry = (jnp.asarray(batch["tokens"]),
+                             jnp.zeros((), jnp.float32))
+                else:
+                    carry = acts[(s - 1, mb)]
+                out, vjp = jax.vjp(
+                    lambda lp, c: run.stage_fns[s](lp, c, labels, fe),
+                    run.stage_params(s), carry)
+                vjps[(s, mb)] = vjp
+                if s == S - 1:
+                    loss, nll = out
+                    losses.append(float(nll))
+                    cots[(s, mb)] = (jnp.ones(()), jnp.zeros(()))
+                else:
+                    acts[(s, mb)] = out
+            else:  # backward
+                ct = cots.pop((s, mb))
+                gparams, gcarry = vjps.pop((s, mb))(ct)
+                if s > 0:
+                    cots[(s - 1, mb)] = gcarry
+                    acts.pop((s - 1, mb), None)
+                gsum[s] = (gparams if gsum[s] is None else
+                           jax.tree.map(jnp.add, gsum[s], gparams))
+
+        grads: Dict[int, Any] = {}
+        for s, lids in enumerate(run.stage_layers):
+            for j, l in enumerate(lids):
+                grads[l] = jax.tree.map(lambda g: g / M, gsum[s][j])
+        return grads, float(np.mean(losses))
+
+    # ------------------------------------------------------------------
+    def train_step(self, per_pipeline_batches: List[List[Dict]]) -> Dict:
+        """per_pipeline_batches[i] = list of N_b,i microbatch dicts."""
+        assert len(per_pipeline_batches) == len(self.runs)
+        all_grads: List[Dict[int, Any]] = []
+        losses, weights = [], []
+        for run, mbs in zip(self.runs, per_pipeline_batches):
+            g, loss = self._run_pipeline(run, mbs)
+            all_grads.append(g)
+            losses.append(loss)
+            weights.append(len(mbs))
+
+        # ---- layer-granular cross-replica sync (Figure 9) -------------
+        wsum = float(sum(weights))
+        synced: Dict[int, Any] = {}
+        for l in range(self.num_layers):
+            contribs = [(w / wsum, g[l]) for w, g in zip(weights, all_grads)
+                        if l in g]
+            acc = jax.tree.map(lambda t: t * contribs[0][0], contribs[0][1])
+            for w, g in contribs[1:]:
+                acc = jax.tree.map(lambda a, t: a + t * w, acc, g)
+            synced[l] = acc
+
+        # ---- global-norm clip across the WHOLE model -------------------
+        # (clipping per layer would diverge from the SPMD fast path)
+        if self.opt_cfg.clip_norm:
+            sq = sum(float(jnp.sum(jnp.square(t.astype(jnp.float32))))
+                     for l in range(self.num_layers)
+                     for t in jax.tree.leaves(synced[l]))
+            norm = float(np.sqrt(sq))
+            scale = min(1.0, self.opt_cfg.clip_norm / max(norm, 1e-12))
+            if scale < 1.0:
+                synced = {l: jax.tree.map(lambda g: g * scale, g_)
+                          for l, g_ in synced.items()}
+        layer_cfg = dataclasses.replace(self.opt_cfg, clip_norm=0.0)
+
+        # ---- identical AdamW update on every replica -------------------
+        self.opt_step = self.opt_step + 1
+        for run in self.runs:
+            for l, st in run.states.items():
+                new_p, new_opt, _ = adamw.apply(
+                    layer_cfg, st["p"], synced[l],
+                    adamw.AdamWState(self.opt_step - 1, st["m"], st["v"]))
+                st["p"], st["m"], st["v"] = new_p, new_opt.m, new_opt.v
+        loss = float(np.average(losses, weights=weights))
+        return {"loss": loss, "num_pipelines": len(self.runs)}
+
+    # ------------------------------------------------------------------
+    # Failure recovery: copy layer states from surviving replicas
+    # ------------------------------------------------------------------
+    def handle_failure(self, dead_nodes: set) -> Dict:
+        # Surviving replicas' states, BEFORE reconfiguration: a node's
+        # layer states survive iff the node survives.
+        survivors: Dict[int, LayerState] = {}
+        for run in self.runs:
+            for st_spec, lids in zip(run.instance.template.stages,
+                                     run.stage_layers):
+                node = run.instance.nodes[st_spec.node_offset]
+                if node in dead_nodes:
+                    continue
+                for l in lids:
+                    survivors.setdefault(l, run.states[l])
+        result = self.engine.handle_failure(dead_nodes)
+        missing = [l for l in range(self.num_layers) if l not in survivors]
+        assert not missing, f"layers {missing} lost (>f failures in a stage)"
+        self.runs = [self._bind(inst, layers=None, source_states=survivors)  # type: ignore
+                     for inst in self.engine.instances]
+        return {"copied_bytes": result.copy_bytes(),
+                "num_pipelines": len(self.runs)}
+
+    def handle_join(self, new_nodes: list) -> Dict:
+        """Elastic scale-up: re-plan globally over the larger cluster and
+        seed every new pipeline's layer states from existing replicas
+        (the same copy path as failure recovery — §5 applies to joins)."""
+        survivors: Dict[int, LayerState] = {}
+        for run in self.runs:
+            for l, st in run.states.items():
+                survivors.setdefault(l, st)
+        result = self.engine.handle_join(list(new_nodes))
+        self.runs = [self._bind(inst, layers=None, source_states=survivors)  # type: ignore
+                     for inst in self.engine.instances]
+        return {"copied_bytes": result.copy_bytes(),
+                "num_pipelines": len(self.runs)}
+
+    # ------------------------------------------------------------------
+    def replica_divergence(self) -> float:
+        """Max abs param difference across replicas (must be ~0)."""
+        worst = 0.0
+        for l in range(self.num_layers):
+            reps = [r.states[l]["p"] for r in self.runs if l in r.states]
+            base = reps[0]
+            for other in reps[1:]:
+                d = jax.tree.map(
+                    lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                                       - b.astype(jnp.float32)))),
+                    base, other)
+                worst = max(worst, max(jax.tree.leaves(d), default=0.0))
+        return worst
+
+    def full_params(self) -> Dict:
+        """Reassemble the canonical full tree from replica 0's layers
+        (for checkpointing / evaluation)."""
+        states = {}
+        for run in self.runs:
+            for l, st in run.states.items():
+                states.setdefault(l, st)
+        blocks = [states[1 + i]["p"] for i in range(self.model.arch.num_layers)]
+        params = {
+            "embed": states[0]["p"]["embed"],
+            "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
+            "final_norm": states[self.num_layers - 1]["p"]["final_norm"],
+        }
+        if "head" in states[self.num_layers - 1]["p"]:
+            params["head"] = states[self.num_layers - 1]["p"]["head"]
+        return params

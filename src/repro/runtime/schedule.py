@@ -1,0 +1,105 @@
+"""1F1B pipeline schedule (Figure 5): construction + makespan simulation.
+
+``one_f_one_b(S, M)`` produces each stage's op sequence: a warmup of
+(S - 1 - s) forwards, then alternating B/F in the steady phase, then a
+drain of backwards.  ``simulate_makespan`` runs the dependency-driven
+event simulation for arbitrary per-stage F/B times — used (a) to check
+the planner's T1+T2+T3 critical-path estimate, (b) by the discrete-event
+simulator to time heterogeneous pipelines.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Dict, List, Sequence, Tuple
+
+Op = Tuple[str, int]          # ("F"|"B", microbatch index)
+
+
+def one_f_one_b(num_stages: int, num_microbatches: int) -> List[List[Op]]:
+    """Per-stage op sequences implementing 1F1B."""
+    S, M = num_stages, num_microbatches
+    assert M >= 1
+    out: List[List[Op]] = []
+    for s in range(S):
+        warmup = min(S - 1 - s, M)
+        ops: List[Op] = [("F", i) for i in range(warmup)]
+        f_next, b_next = warmup, 0
+        while b_next < M:
+            if f_next < M:
+                ops.append(("F", f_next)); f_next += 1
+            ops.append(("B", b_next)); b_next += 1
+        out.append(ops)
+    return out
+
+
+def flat_schedule(num_stages: int, num_microbatches: int
+                  ) -> List[Tuple[int, str, int]]:
+    """Dependency-respecting serialization: (stage, op, mb) triples in an
+    order a single controller can execute."""
+    per_stage = one_f_one_b(num_stages, num_microbatches)
+    ptr = [0] * num_stages
+    done_f = [set() for _ in range(num_stages)]
+    done_b = [set() for _ in range(num_stages)]
+    out: List[Tuple[int, str, int]] = []
+    total = sum(len(ops) for ops in per_stage)
+    while len(out) < total:
+        progressed = False
+        # favor deeper stages first (drain backwards early, 1F1B spirit)
+        for s in reversed(range(num_stages)):
+            if ptr[s] >= len(per_stage[s]):
+                continue
+            op, mb = per_stage[s][ptr[s]]
+            ready = ((op == "F" and (s == 0 or mb in done_f[s - 1])) or
+                     (op == "B" and (s == num_stages - 1 or mb in done_b[s + 1])
+                      and mb in done_f[s]))
+            if ready:
+                out.append((s, op, mb))
+                (done_f if op == "F" else done_b)[s].add(mb)
+                ptr[s] += 1
+                progressed = True
+        assert progressed, "1F1B schedule deadlocked (bug)"
+    return out
+
+
+def simulate_makespan(stage_fwd: Sequence[float], stage_bwd: Sequence[float],
+                      num_microbatches: int,
+                      hop_time: float = 0.0) -> float:
+    """Event-driven makespan of 1F1B with given per-stage F/B times."""
+    S = len(stage_fwd)
+    per_stage = one_f_one_b(S, num_microbatches)
+    ptr = [0] * S
+    free_at = [0.0] * S
+    f_done: Dict[Tuple[int, int], float] = {}
+    b_done: Dict[Tuple[int, int], float] = {}
+    finish = 0.0
+    remaining = sum(len(o) for o in per_stage)
+    while remaining:
+        progressed = False
+        for s in range(S):
+            while ptr[s] < len(per_stage[s]):
+                op, mb = per_stage[s][ptr[s]]
+                if op == "F":
+                    dep = 0.0 if s == 0 else f_done.get((s - 1, mb))
+                    if dep is None:
+                        break
+                    start = max(free_at[s], dep + (hop_time if s else 0.0))
+                    end = start + stage_fwd[s]
+                    f_done[(s, mb)] = end
+                else:
+                    if (s, mb) not in f_done:
+                        break
+                    dep = 0.0 if s == S - 1 else b_done.get((s + 1, mb))
+                    if dep is None:
+                        break
+                    start = max(free_at[s], f_done[(s, mb)],
+                                dep + (hop_time if s != S - 1 else 0.0))
+                    end = start + stage_bwd[s]
+                    b_done[(s, mb)] = end
+                free_at[s] = end
+                finish = max(finish, end)
+                ptr[s] += 1
+                remaining -= 1
+                progressed = True
+        if not progressed:
+            raise RuntimeError("deadlock in makespan simulation")
+    return finish

@@ -1,0 +1,259 @@
+"""Sharding strategies: parameter/optimizer/activation PartitionSpecs.
+
+Oobleck-on-GPU uses FSDP inside each pipeline stage (§6 of the paper) —
+on TPU that is parameters sharded over the ``model`` axis with
+all-gather-at-use (ZeRO-3 semantics under GSPMD).  We additionally
+implement Megatron-style tensor parallelism ("tp") as a beyond-paper
+alternative (column/row-parallel projections; activations stay sharded
+over heads inside a block), plus ZeRO-1 optimizer-state sharding over the
+data axes for either strategy.
+
+Specs are derived by pattern-matching parameter tree paths, with
+divisibility guards: a dimension is only sharded if the mesh axis divides
+it (GQA models with few KV heads etc. fall back to replication for that
+tensor).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingStrategy:
+    """How to lay a model out on a ("pod",)? + ("data", "model") mesh."""
+
+    strategy: str = "fsdp"        # fsdp | tp
+    zero1: bool = True            # shard optimizer moments over data axes
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+
+    @property
+    def batch_axes(self) -> Tuple[str, ...]:
+        """Axes the batch shards over.  Pure FSDP (ZeRO-3) compute is
+        data-parallel across EVERY chip — the ``model`` axis only shards
+        parameter storage — so the batch spans it too.  TP keeps compute
+        partitioned over ``model`` and shards the batch over data axes
+        only."""
+        if self.strategy == "fsdp":
+            return self.data_axes + (self.model_axis,)
+        return self.data_axes
+
+    # ------------------------------------------------------------------
+    def _axis_size(self, mesh: Mesh, axis) -> int:
+        if isinstance(axis, tuple):
+            out = 1
+            for a in axis:
+                out *= mesh.shape[a]
+            return out
+        return mesh.shape[axis]
+
+    def _maybe(self, mesh: Mesh, dim_size: int, axis):
+        """Return axis if it divides dim_size, else None (replicate)."""
+        return axis if dim_size % self._axis_size(mesh, axis) == 0 else None
+
+    # ------------------------------------------------------------------
+    def param_spec(self, mesh: Mesh, path: str, shape: Tuple[int, ...]) -> P:
+        """PartitionSpec for one parameter.  ``path`` like
+        'blocks/attn/wq' (leading 'blocks' means a stacked [L, ...] dim)."""
+        m = self.model_axis
+        stacked = path.startswith("blocks/")
+        lead = (None,) if stacked else ()
+        body = shape[1:] if stacked else shape
+
+        def col(i):  # shard output dim i of the body
+            specs = [None] * len(body)
+            specs[i] = self._maybe(mesh, body[i], m)
+            return P(*lead, *specs)
+
+        name = path.split("/")[-1]
+        parent = path.split("/")[-2] if "/" in path else ""
+
+        if self.strategy == "fsdp":
+            # shard the largest dim of every >=2D tensor over `model`.
+            if len(body) >= 2:
+                i = int(np.argmax(body))
+                return col(i)
+            return P(*lead, *([None] * len(body)))
+
+        # ---- Megatron TP ------------------------------------------------
+        if parent == "moe" and name in ("gate", "up", "down"):
+            return col(0)                       # expert parallelism over E
+        if name in ("wq", "wk", "wv", "gate", "up", "in_proj"):
+            return col(len(body) - 1)           # column parallel
+        if name in ("wo", "down", "out_proj"):
+            return col(len(body) - 2) if len(body) >= 2 else col(0)
+        if name in ("bq", "bk", "bv"):
+            return col(0)
+        if name == "table":
+            return col(0)                       # vocab-sharded embedding
+        if name == "router":
+            return P(*lead, None, None)
+        if name in ("conv_w", "conv_b"):
+            return col(len(body) - 1)
+        if name in ("A_log", "dt_bias", "D", "norm_w"):
+            return col(0)
+        return P(*lead, *([None] * len(body)))
+
+    def param_shardings(self, mesh: Mesh, params: Any) -> Any:
+        def spec_for(path, leaf):
+            pstr = "/".join(_key_name(k) for k in path)
+            return NamedSharding(mesh, self.param_spec(mesh, pstr, leaf.shape))
+        return jax.tree_util.tree_map_with_path(spec_for, params)
+
+    def opt_shardings(self, mesh: Mesh, opt_state: Any, params: Any) -> Any:
+        """Moments: like params; with ZeRO-1 additionally shard the first
+        unsharded dim over the data axes."""
+        pspecs = self.param_shardings(mesh, params)
+
+        def zero1_spec(ns: NamedSharding, leaf) -> NamedSharding:
+            if not self.zero1:
+                return ns
+            spec = list(ns.spec) + [None] * (leaf.ndim - len(ns.spec))
+            daxis = self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+            for i, (s, dim) in enumerate(zip(spec, leaf.shape)):
+                if s is None and dim % self._axis_size(ns.mesh, daxis) == 0 \
+                        and dim >= 2 * self._axis_size(ns.mesh, daxis):
+                    spec[i] = daxis
+                    return NamedSharding(ns.mesh, P(*spec))
+            return ns
+
+        m = jax.tree.map(zero1_spec, pspecs, params)
+        v = jax.tree.map(zero1_spec, pspecs, params)
+        step = NamedSharding(mesh, P())
+        return type(opt_state)(step=step, m=m, v=v)
+
+    # ------------------------------------------------------------------
+    def batch_spec(self, mesh: Mesh, global_batch: int) -> P:
+        """Shard the batch over the longest prefix of batch_axes that
+        divides it (small serving batches drop the model axis first,
+        then pods; batch=1 replicates)."""
+        axes = list(self.batch_axes)
+        while axes:
+            axis = tuple(axes) if len(axes) > 1 else axes[0]
+            if global_batch % self._axis_size(mesh, axis) == 0:
+                return P(axis)
+            axes.pop()
+        return P()
+
+    def act_constrainer(self, mesh: Mesh, global_batch: int):
+        bspec = self.batch_spec(mesh, global_batch)
+        batch_axis = bspec[0] if len(bspec) else None
+        # sequence parallelism over whatever batch axes the (small) batch
+        # could not cover: activations [b, s, d] shard s over the leftover
+        # axes so compute still spans every chip (GSPMD inserts the
+        # gathers sequence-dependent ops need, e.g. K/V for attention).
+        used = set()
+        if batch_axis is not None:
+            used = set(batch_axis) if isinstance(batch_axis, tuple) else {batch_axis}
+        leftover = tuple(a for a in self.batch_axes if a not in used)
+        seq_axis = (leftover if len(leftover) > 1 else leftover[0]) if leftover else None
+
+        model_free = self.model_axis not in used
+
+        def constrain(x, name):
+            if x.ndim < 2:
+                return x
+            if name == "logits":
+                vocab = (self._maybe(mesh, x.shape[-1], self.model_axis)
+                         if model_free else None)
+                spec = P(batch_axis, *([None] * (x.ndim - 2)), vocab)
+            elif name == "heads4d" and x.ndim == 4:
+                # decode q/k/v: head_dim-sharded to match the KV cache —
+                # uniform across GQA configs (KV heads rarely divide a
+                # 16-wide model axis; head_dim 64/128 always does).  The
+                # price is a small partial-sum all-reduce on the scores.
+                if not model_free:
+                    return x
+                d_ax = self._maybe(mesh, x.shape[3], self.model_axis)
+                spec = P(batch_axis, None, None, d_ax)
+            elif x.ndim >= 3 and seq_axis is not None \
+                    and x.shape[1] % self._axis_size(mesh, seq_axis) == 0 \
+                    and x.shape[1] > 1:
+                spec = P(batch_axis, seq_axis, *([None] * (x.ndim - 2)))
+            else:
+                spec = P(batch_axis, *([None] * (x.ndim - 1)))
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, spec))
+        return constrain
+
+    #: gather weights in this dtype (None keeps the storage dtype).
+    #: bf16 halves both the all-gather bytes and the gathered buffers vs
+    #: gathering the fp32 master copy; gradients then reduce-scatter in
+    #: bf16 too (fp32 accumulation happens in the optimizer) — standard
+    #: mixed-precision FSDP practice.  §Perf iteration A3.
+    gather_dtype: Optional[str] = None
+
+    def unshard_blocks(self, mesh: Mesh):
+        """FSDP/ZeRO-3 semantics: all-gather a block's weights right
+        before use so compute is purely data-parallel (backward of the
+        gather is the gradient reduce-scatter).  Without this, GSPMD
+        propagation turns dim-sharded weights into Megatron-TP with an
+        activation all-reduce per projection — a different (and for FSDP,
+        worse) collective pattern.  TP strategy: identity."""
+        if self.strategy != "fsdp":
+            return lambda tree: tree
+        import jax.numpy as jnp
+        cast = (jnp.dtype(self.gather_dtype) if self.gather_dtype else None)
+
+        def unshard(tree):
+            def one(t):
+                if cast is not None and t.dtype == jnp.float32:
+                    t = t.astype(cast)
+                return jax.lax.with_sharding_constraint(
+                    t, NamedSharding(mesh, P(*([None] * t.ndim))))
+            return jax.tree.map(one, tree)
+        return unshard
+
+    def cache_shardings(self, mesh: Mesh, cache: Any, batch: int) -> Any:
+        """KV/SSM caches: shard batch if divisible, else heads over model."""
+        bspec = self.batch_spec(mesh, batch)
+        batch_axis = bspec[0] if len(bspec) else None
+        used = (set(batch_axis) if isinstance(batch_axis, tuple)
+                else {batch_axis} if batch_axis else set())
+        model_free = self.model_axis not in used
+
+        def spec_for(path, leaf):
+            # layouts: attn k/v [L, B, S, KV, D]; mamba conv [L, B, W, dim];
+            # mamba ssm [L, B, H, P, N]
+            pstr = "/".join(_key_name(k) for k in path)
+            dims = [None] * leaf.ndim
+            if leaf.ndim >= 2:
+                dims[1] = batch_axis
+            if model_free:
+                if "attn" in pstr and leaf.ndim == 5:
+                    # head_dim-sharded (matches the decode heads4d rule)
+                    dims[4] = self._maybe(mesh, leaf.shape[4],
+                                          self.model_axis)
+                    if dims[4] is None:
+                        dims[3] = self._maybe(mesh, leaf.shape[3],
+                                              self.model_axis)
+                elif "ssm" in pstr and leaf.ndim == 5:
+                    dims[2] = self._maybe(mesh, leaf.shape[2], self.model_axis)
+                    if dims[2] is None:
+                        dims[3] = self._maybe(mesh, leaf.shape[3],
+                                              self.model_axis)
+                elif "conv" in pstr and leaf.ndim == 4:
+                    dims[3] = self._maybe(mesh, leaf.shape[3], self.model_axis)
+            return NamedSharding(mesh, P(*dims))
+        return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def _key_name(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def strategy_for(arch: ArchConfig, name: str = "fsdp",
+                 data_axes: Tuple[str, ...] = ("data",)) -> ShardingStrategy:
+    return ShardingStrategy(strategy=name, data_axes=data_axes)

@@ -1,0 +1,124 @@
+"""SPMD train/serve step builders — the homogeneous fast path.
+
+With zero failures all Oobleck pipelines run the same template, and the
+whole job folds into ONE SPMD program: DP over ``data`` (+ ``pod``),
+parameter sharding (FSDP or TP) over ``model``, gradient mean implicit in
+the sharded loss-mean backward (XLA emits the cross-replica
+all-reduce/reduce-scatter).  This is the program the multi-pod dry-run
+lowers and the roofline analyses; heterogeneous pipeline sets swap
+between per-template programs of exactly this shape (runtime/pipeline.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import Model
+from repro.optim import adamw
+from repro.runtime.sharding import ShardingStrategy
+
+
+def build_model(arch: ArchConfig, strategy: ShardingStrategy, mesh: Mesh,
+                global_batch: int, *, dtype=jnp.bfloat16,
+                param_dtype=jnp.float32, remat: bool = True,
+                attn_impl: str = "blocked", moe_impl: str = "dense") -> Model:
+    return Model(
+        arch, dtype=dtype, param_dtype=param_dtype, remat=remat,
+        attn_impl=attn_impl, moe_impl=moe_impl,
+        constrain=strategy.act_constrainer(mesh, global_batch),
+        unshard=strategy.unshard_blocks(mesh))
+
+
+def build_train_step(model: Model, opt_cfg: adamw.AdamWConfig
+                     ) -> Callable:
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return model.loss(p, batch)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params2, opt2, stats = adamw.apply(opt_cfg, params, grads, opt_state)
+        return params2, opt2, {"loss": loss, **metrics, **stats}
+    return train_step
+
+
+def build_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, batch):
+        fe = batch.get("frontend_embeds")
+        return model.prefill(params, batch["tokens"], fe)
+    return prefill_step
+
+
+def build_decode_step(model: Model) -> Callable:
+    def decode_step(params, token, cache, pos):
+        return model.decode_step(params, token, cache, pos)
+    return decode_step
+
+
+# ----------------------------------------------------------------------
+# Sharding-annotated jit wrappers (used by launch/train.py and dryrun.py)
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class StepBundle:
+    """A jitted step with its in/out shardings, ready to lower or run."""
+
+    fn: Callable
+    in_shardings: Tuple
+    out_shardings: Any
+
+    def jit(self, donate: Tuple[int, ...] = ()):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=donate)
+
+
+def train_bundle(model: Model, opt_cfg: adamw.AdamWConfig,
+                 strategy: ShardingStrategy, mesh: Mesh,
+                 params_shape: Any, opt_shape: Any,
+                 shape: ShapeConfig) -> StepBundle:
+    pspec = strategy.param_shardings(mesh, params_shape)
+    ospec = strategy.opt_shardings(mesh, opt_shape, params_shape)
+    bshard = NamedSharding(mesh, strategy.batch_spec(mesh, shape.global_batch))
+    batch_spec: Dict[str, Any] = {"tokens": bshard, "labels": bshard}
+    if model.arch.frontend:
+        batch_spec["frontend_embeds"] = bshard
+    scalar = NamedSharding(mesh, P())
+    out_stats = {k: scalar for k in
+                 ("loss", "nll", "aux", "lr", "grad_norm")}
+    return StepBundle(
+        fn=build_train_step(model, opt_cfg),
+        in_shardings=(pspec, ospec, batch_spec),
+        out_shardings=(pspec, ospec, out_stats))
+
+
+def prefill_bundle(model: Model, strategy: ShardingStrategy, mesh: Mesh,
+                   params_shape: Any, shape: ShapeConfig) -> StepBundle:
+    pspec = strategy.param_shardings(mesh, params_shape)
+    bshard = NamedSharding(mesh, strategy.batch_spec(mesh, shape.global_batch))
+    batch_spec: Dict[str, Any] = {"tokens": bshard}
+    if model.arch.frontend:
+        batch_spec["frontend_embeds"] = bshard
+    logits_out = NamedSharding(
+        mesh, P(strategy.batch_spec(mesh, shape.global_batch)[0]
+                if len(strategy.batch_spec(mesh, shape.global_batch)) else None))
+    return StepBundle(
+        fn=build_prefill_step(model),
+        in_shardings=(pspec, batch_spec),
+        out_shardings=logits_out)
+
+
+def decode_bundle(model: Model, strategy: ShardingStrategy, mesh: Mesh,
+                  params_shape: Any, cache_shape: Any,
+                  shape: ShapeConfig) -> StepBundle:
+    pspec = strategy.param_shardings(mesh, params_shape)
+    cspec = strategy.cache_shardings(mesh, cache_shape, shape.global_batch)
+    bshard = NamedSharding(mesh, strategy.batch_spec(mesh, shape.global_batch))
+    scalar = NamedSharding(mesh, P())
+    return StepBundle(
+        fn=build_decode_step(model),
+        in_shardings=(pspec, bshard, cspec, scalar),
+        out_shardings=(bshard, cspec))

@@ -1,0 +1,99 @@
+"""SPMD pipeline-parallel forward via shard_map (the TPU-native mapping
+of one Oobleck pipeline template — DESIGN.md §2).
+
+Each stage of a (uniform) template owns L/S consecutive blocks; the
+template's GPipe-style schedule is a static loop of M + S - 1 ticks in
+which every stage computes one microbatch and hands its activation to
+stage+1 with ``jax.lax.ppermute``.  This is the program a pipeline
+instance launches per microbatch wave on real hardware; the
+single-controller HeteroTrainer (pipeline.py) remains the reference for
+heterogeneous stage layouts (SPMD requires every shard to run the same
+program, so stages must be uniform here — Oobleck's planner emits
+near-uniform splits for homogeneous-cost blocks, making this the
+production fast path).
+
+Correctness is pinned by tests/test_spmd_pipeline.py: the pipelined
+forward equals the plain forward bit-for-bit on a multi-device host mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.models import Model
+
+
+def stack_by_stage(params_blocks, num_stages: int):
+    """[L, ...] stacked blocks -> [S, L/S, ...]."""
+    L = jax.tree.leaves(params_blocks)[0].shape[0]
+    assert L % num_stages == 0, (L, num_stages)
+    return jax.tree.map(
+        lambda t: t.reshape(num_stages, L // num_stages, *t.shape[1:]),
+        params_blocks)
+
+
+def pipeline_forward(model: Model, params: Dict, x_mb: jax.Array,
+                     mesh: Mesh, stage_axis: str = "stage") -> jax.Array:
+    """Pipelined hidden-state forward.
+
+    x_mb: [M, b, s, d_model] pre-embedded microbatches.  Returns
+    [M, b, s, d_model] block-stack outputs (before final norm/head).
+    """
+    S = mesh.shape[stage_axis]
+    M = x_mb.shape[0]
+    blocks = stack_by_stage(params["blocks"], S)
+    perm = [(i, (i + 1) % S) for i in range(S)]
+
+    def stage_program(stage_blocks, xs):
+        # stage_blocks: [1, L/S, ...] local slice; xs: [M, b, s, d] replicated
+        local = jax.tree.map(lambda t: t[0], stage_blocks)
+        idx = jax.lax.axis_index(stage_axis)
+        b, s, d = xs.shape[1:]
+        buf = jnp.zeros((b, s, d), xs.dtype)          # activation register
+        outs = jnp.zeros_like(xs)
+
+        def tick(carry, t):
+            buf, outs = carry
+            inp = jax.lax.ppermute(buf, stage_axis, perm)
+            feed = jnp.where(t < M, t, 0)
+            inp = jnp.where(idx == 0, xs[feed], inp)
+            out, _ = model.run_blocks(local, inp, jnp.zeros((), jnp.float32))
+            # last stage finishes microbatch t - (S - 1) at tick t
+            done = t - (S - 1)
+            valid = (idx == S - 1) & (done >= 0)
+            outs = jax.lax.cond(
+                valid,
+                lambda o: jax.lax.dynamic_update_slice(
+                    o, out[None], (jnp.maximum(done, 0), 0, 0, 0)),
+                lambda o: o, outs)
+            return (out, outs), None
+
+        (_, outs), _ = jax.lax.scan(tick, (buf, outs),
+                                    jnp.arange(M + S - 1))
+        # every stage holds its own `outs`; only the last stage's is real
+        return outs
+
+    fn = shard_map(
+        stage_program, mesh=mesh,
+        in_specs=(P(stage_axis), P()),
+        out_specs=P(stage_axis),
+        check_rep=False)
+    stacked = fn(blocks, x_mb)          # [S*M, b, s, d] stage-major
+    return stacked.reshape(S, M, *x_mb.shape[1:])[-1]
+
+
+def pipeline_logits(model: Model, params: Dict, tokens_mb: jax.Array,
+                    mesh: Mesh, stage_axis: str = "stage") -> jax.Array:
+    """Embed -> pipelined blocks -> final norm + head. tokens: [M, b, s]."""
+    from repro.models.layers import embed, rms_norm, unembed
+    x = jax.vmap(lambda t: embed(params["embed"], t, model.dtype))(tokens_mb)
+    h = pipeline_forward(model, params, x, mesh, stage_axis)
+    h = rms_norm(params["final_norm"].astype(h.dtype), h,
+                 model.arch.rms_norm_eps)
+    head = params.get("head", params["embed"])
+    return jax.vmap(lambda v: unembed(head, v))(h)

@@ -1,0 +1,8 @@
+from repro.sim.policies import (BambooPolicy, OobleckPolicy, Policy,
+                                PolicyStopped, VarunaPolicy)
+from repro.sim.simulator import SimResult, TraceEvent, run_sim
+from repro.sim.traces import controlled_failures, spot_trace
+
+__all__ = ["BambooPolicy", "OobleckPolicy", "Policy", "PolicyStopped",
+           "VarunaPolicy", "SimResult", "TraceEvent", "run_sim",
+           "controlled_failures", "spot_trace"]

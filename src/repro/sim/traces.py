@@ -1,0 +1,60 @@
+"""Failure/availability traces (paper §7.2 controlled + §7.3 spot).
+
+* ``controlled_failures`` — one failure every ``interval`` seconds,
+  monotonically removing nodes (no recovery), exactly the §7.2 protocol
+  ("monotonically reduce the number of available nodes ... until less
+  than half the nodes remain").
+* ``spot_trace`` — preemption/recovery events with exponential
+  inter-arrival times calibrated to the paper's EC2 (7.7 min) and GCP
+  (10.3 min) preemption rates; node count fluctuates in [lo, hi].
+"""
+from __future__ import annotations
+
+import random
+from typing import List
+
+from repro.sim.simulator import TraceEvent
+
+
+def controlled_failures(nodes: List[str], interval: float,
+                        stop_at: int) -> List[TraceEvent]:
+    """Kill one node every ``interval`` seconds until ``stop_at`` remain."""
+    out: List[TraceEvent] = []
+    t = interval
+    alive = list(nodes)
+    while len(alive) > stop_at:
+        victim = alive.pop()          # deterministic: highest index first
+        out.append(TraceEvent(time=t, kind="fail", nodes=(victim,)))
+        t += interval
+    return out
+
+
+def spot_trace(nodes: List[str], horizon: float, mean_preempt: float,
+               mean_recover: float, seed: int = 0,
+               min_alive: int = 4) -> List[TraceEvent]:
+    """Spot-instance availability: exponential preemptions + recoveries."""
+    rng = random.Random(seed)
+    alive = set(nodes)
+    gone: List[str] = []
+    out: List[TraceEvent] = []
+    t = 0.0
+    while True:
+        t += rng.expovariate(1.0 / mean_preempt)
+        if t >= horizon:
+            break
+        # coin flip between preemption and (if any gone) recovery, biased
+        # by how many nodes are currently out
+        recover = gone and (rng.random() < len(gone) / (len(gone) + 4))
+        if recover:
+            k = min(len(gone), 1 + int(rng.random() * 2))
+            back = [gone.pop() for _ in range(k)]
+            alive |= set(back)
+            out.append(TraceEvent(t, "join", tuple(back)))
+        else:
+            if len(alive) <= min_alive:
+                continue
+            victim = rng.choice(sorted(alive))
+            alive.remove(victim)
+            gone.append(victim)
+            out.append(TraceEvent(t, "fail", (victim,)))
+    return out

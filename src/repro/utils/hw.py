@@ -1,0 +1,69 @@
+"""Hardware constants for the target platform (TPU v5e-class).
+
+These drive three things:
+  1. the planner's analytical cost model (core/cost_model.py),
+  2. the discrete-event simulator's iteration/restore timings (sim/),
+  3. the roofline analysis (launch/roofline.py).
+
+The container executes on CPU; the constants describe the TARGET hardware,
+per the task spec: 197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """One accelerator chip + its fabric."""
+
+    peak_flops_bf16: float = 197e12     # FLOP/s per chip (MXU, bf16)
+    hbm_bandwidth: float = 819e9        # bytes/s per chip
+    hbm_capacity: int = 16 * 1024**3    # bytes per chip (v5e: 16 GiB)
+    vmem_capacity: int = 128 * 1024**2  # bytes of VMEM per chip (~128 MiB)
+    ici_bandwidth: float = 50e9         # bytes/s per ICI link (one direction)
+    ici_links_per_chip: int = 4         # 2D torus: 4 links
+    dcn_bandwidth: float = 25e9         # bytes/s per host, cross-pod (DCN)
+    mxu_efficiency: float = 0.72        # achievable fraction of peak on GEMMs
+    chips_per_node: int = 4             # "node" = ICI neighborhood quartet
+
+    # Storage path used for checkpoints (distributed object store).
+    ckpt_write_bandwidth: float = 8e9   # bytes/s aggregate write
+    ckpt_read_bandwidth: float = 12e9   # bytes/s aggregate read
+
+
+#: Default target chip. Everything takes a HardwareSpec parameter and
+#: defaults to this, so tests can substitute toy hardware.
+V5E = HardwareSpec()
+
+
+def matmul_time(flops: float, chips: int, hw: HardwareSpec = V5E) -> float:
+    """Seconds to execute ``flops`` of GEMM work on ``chips`` chips."""
+    return flops / (chips * hw.peak_flops_bf16 * hw.mxu_efficiency)
+
+
+def allreduce_time(nbytes: float, participants: int,
+                   bandwidth: float | None = None,
+                   hw: HardwareSpec = V5E) -> float:
+    """Ring all-reduce: 2*(k-1)/k * bytes over the slowest link."""
+    if participants <= 1:
+        return 0.0
+    bw = bandwidth if bandwidth is not None else hw.ici_bandwidth
+    return 2.0 * (participants - 1) / participants * nbytes / bw
+
+
+def allgather_time(nbytes: float, participants: int,
+                   bandwidth: float | None = None,
+                   hw: HardwareSpec = V5E) -> float:
+    """Ring all-gather of a ``nbytes`` shard from each of ``participants``."""
+    if participants <= 1:
+        return 0.0
+    bw = bandwidth if bandwidth is not None else hw.ici_bandwidth
+    return (participants - 1) / participants * nbytes / bw
+
+
+def p2p_time(nbytes: float, bandwidth: float | None = None,
+             hw: HardwareSpec = V5E) -> float:
+    """Point-to-point transfer (pipeline activation hops, state copy)."""
+    bw = bandwidth if bandwidth is not None else hw.ici_bandwidth
+    return nbytes / bw

@@ -1,0 +1,91 @@
+"""Elastic scale-up at array level: node joins re-plan globally, new
+pipelines copy state from replicas, and the training trajectory is
+preserved (same global batch, same updates)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.core import EngineConfig, OobleckEngine, build_profile
+from repro.data import GlobalBatchDispenser, SyntheticLM
+from repro.models import Model
+from repro.optim import adamw
+from repro.runtime import HeteroTrainer
+
+RNG = jax.random.PRNGKey(4)
+GB, MB, SEQ = 16, 2, 16
+
+
+def microbatches(batch, mb):
+    n = batch["tokens"].shape[0] // mb
+    return [{k: v[i * mb:(i + 1) * mb] for k, v in batch.items()
+             if not k.startswith("_")} for i in range(n)]
+
+
+def test_join_preserves_trajectory():
+    arch = reduced(get_arch("gpt3_medium"), layers=4)
+    model = Model(arch, dtype=jnp.float32, remat=False, attn_impl="naive",
+                  scan_layers=False)
+    params = model.init(RNG)
+    profile = build_profile(arch, microbatch=MB, seq_len=SEQ)
+    engine = OobleckEngine(profile, [f"n{i}" for i in range(5)],
+                           EngineConfig(fault_tolerance=1, global_batch=GB,
+                                        microbatch=MB, gpus_per_node=1,
+                                        n0_override=2))
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=0, weight_decay=0.0)
+    trainer = HeteroTrainer(model, engine, params, opt_cfg)
+    source = SyntheticLM(arch.vocab_size, SEQ, seed=2)
+    disp = GlobalBatchDispenser(source)
+
+    # reference on a fixed cluster
+    ref_params = jax.tree.map(jnp.copy, params)
+    ref_opt = adamw.init(ref_params)
+
+    def ref_step(indices):
+        nonlocal ref_params, ref_opt
+        full = source.batch(indices)
+        batch = {"tokens": jnp.asarray(full["tokens"]),
+                 "labels": jnp.asarray(full["labels"])}
+        def loss_fn(p):
+            return model.loss(p, batch)
+        (_, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(ref_params)
+        ref_params, ref_opt, _ = adamw.apply(opt_cfg, ref_params, grads,
+                                             ref_opt)
+
+    def drive():
+        batches = disp.next_step(engine.batch.minibatch_sizes())
+        idx = np.concatenate([b["_indices"] for b in batches])
+        out = trainer.train_step([microbatches(b, MB) for b in batches])
+        return out, idx
+
+    out0, idx0 = drive(); ref_step(idx0)
+    n_before = len(engine.nodes)
+    info = trainer.handle_join(["fresh0", "fresh1", "fresh2"])
+    assert len(engine.nodes) == n_before + 3
+    assert info["num_pipelines"] >= 2
+    out1, idx1 = drive(); ref_step(idx1)
+
+    assert trainer.replica_divergence() < 1e-6
+    got = trainer.full_params()
+    np.testing.assert_allclose(np.asarray(got["embed"]["table"]),
+                               np.asarray(ref_params["embed"]["table"]),
+                               rtol=2e-4, atol=2e-4)
+    # new nodes actually host state
+    hosted = {n for inst in engine.instances for n in inst.nodes}
+    assert {"fresh0", "fresh1", "fresh2"} <= hosted
+
+
+def test_join_beyond_original_n_keeps_spares():
+    """Joins beyond the original N may be uncoverable by the fixed
+    template set; the engine must use the largest coverable subset."""
+    arch = reduced(get_arch("gpt3_medium"), layers=4)
+    profile = build_profile(arch, microbatch=MB, seq_len=SEQ)
+    engine = OobleckEngine(profile, [f"n{i}" for i in range(4)],
+                           EngineConfig(fault_tolerance=1, global_batch=GB,
+                                        microbatch=MB, gpus_per_node=1,
+                                        n0_override=2))
+    assert engine.spec.sizes == (2,)         # N=4, f=1: only 2-node pipes
+    r = engine.handle_join(["j0", "j1", "j2"])  # 7 nodes: 6 usable, 1 spare
+    assert len(r.spare_nodes) == 1
+    assert len(engine.nodes) == 6
+    assert all(i.template.num_nodes == 2 for i in engine.instances)

@@ -1,0 +1,103 @@
+"""Coin-change instantiation (§4.2.1) + batch distribution (§4.2.2)."""
+import itertools
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (PipelinePlanner, PlanningError, choose_plan,
+                        distribute_microbatches, enumerate_feasible_sets,
+                        generate_node_spec)
+from repro.core.batch import _objective, distribute_batch, recommend_global_batch
+
+
+def test_paper_figure7_example():
+    """Figure 7: sizes (2,3,4), N=7 — feasible sets are exactly the
+    combinations summing to 7."""
+    sets = enumerate_feasible_sets((2, 3, 4), 7, min_count=1)
+    as_tuples = sorted(sets)
+    expected = sorted([(2, 1, 0), (0, 1, 1)])
+    assert as_tuples == expected
+
+
+def test_enumeration_matches_bruteforce():
+    sizes = (2, 3, 4, 5)
+    for N in (8, 11, 13):
+        got = sorted(enumerate_feasible_sets(sizes, N, min_count=1))
+        brute = sorted(
+            x for x in itertools.product(*(range(N // s + 1) for s in sizes))
+            if sum(a * b for a, b in zip(x, sizes)) == N and sum(x) >= 1)
+        assert got == brute
+
+
+def test_min_count_filter():
+    sets = enumerate_feasible_sets((2, 3, 4), 8, min_count=3)
+    assert all(sum(x) >= 3 for x in sets)
+    assert (0, 0, 2) not in sets
+    assert (4, 0, 0) in sets
+
+
+@settings(max_examples=40, deadline=None)
+@given(total=st.integers(4, 120),
+       times=st.lists(st.floats(0.1, 10.0), min_size=2, max_size=6))
+def test_batch_distribution_feasible_and_locally_optimal(total, times):
+    if total < len(times):
+        with pytest.raises(PlanningError):
+            distribute_microbatches(times, total)
+        return
+    counts = distribute_microbatches(times, total)
+    assert sum(counts) == total
+    assert all(c >= 1 for c in counts)
+    # 1-exchange local optimality of the Eq. 6 objective
+    base = _objective(counts, times)
+    for i in range(len(counts)):
+        if counts[i] <= 1:
+            continue
+        for j in range(len(counts)):
+            if i == j:
+                continue
+            trial = list(counts)
+            trial[i] -= 1
+            trial[j] += 1
+            assert _objective(trial, times) >= base - 1e-9
+
+
+def test_batch_distribution_exact_small_bruteforce():
+    times = [1.0, 2.0, 4.0]
+    total = 14
+    counts = distribute_microbatches(times, total)
+    best = min(
+        (c for c in itertools.product(range(1, total + 1), repeat=3)
+         if sum(c) == total),
+        key=lambda c: _objective(list(c), times))
+    assert _objective(counts, times) <= _objective(list(best), times) + 1e-9
+
+
+def test_faster_pipeline_gets_more_microbatches():
+    counts = distribute_microbatches([1.0, 2.0], 30)
+    assert counts[0] > counts[1]
+    # loads should be near equal
+    assert abs(counts[0] * 1.0 - counts[1] * 2.0) <= 2.0
+
+
+def test_recommend_global_batch():
+    assert recommend_global_batch(5, 4, 18) == 20
+    assert recommend_global_batch(3, 2, 100) == 100
+
+
+def test_choose_plan_uses_all_nodes(gpt27_profile):
+    spec = generate_node_spec(N=13, f=2, n0=2)
+    planner = PipelinePlanner(gpt27_profile, gpus_per_node=1)
+    templates = planner.plan_all(spec.sizes)
+    plan = choose_plan(templates, spec, 13, global_batch=1024, microbatch=2)
+    assert sum(c * s for c, s in zip(plan.counts, plan.sizes)) == 13
+    assert plan.num_pipelines >= 3      # f+1
+    assert sum(plan.batch.num_microbatches) * 2 == 1024
+
+
+def test_choose_plan_infeasible_batch_raises(gpt27_profile):
+    spec = generate_node_spec(N=13, f=2, n0=2)
+    planner = PipelinePlanner(gpt27_profile, gpus_per_node=1)
+    templates = planner.plan_all(spec.sizes)
+    with pytest.raises(PlanningError):
+        # f+1 = 3 pipelines minimum but only 2 microbatches available
+        choose_plan(templates, spec, 13, global_batch=4, microbatch=2)

@@ -1,0 +1,179 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret=True executes the kernel bodies on CPU) + hypothesis
+properties.  Task deliverable (c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention as fa_kernel
+from repro.kernels.ssd import ssd as ssd_kernel
+
+RNG = jax.random.PRNGKey(3)
+
+
+def _qkv(B, S, H, KV, D, dtype):
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, D)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, D)).astype(dtype)
+    return q, k, v
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-5, atol=2e-5)
+
+
+# ----------------------------------------------------------------------
+# Flash attention sweeps
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("S", [16, 64, 100, 160])
+@pytest.mark.parametrize("H,KV", [(4, 4), (4, 2), (8, 1)])
+def test_flash_attention_shapes(S, H, KV):
+    q, k, v = _qkv(2, S, H, KV, 16, jnp.float32)
+    out = fa_kernel(q, k, v, block_q=32, block_k=32, interpret=True)
+    exp = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(out, exp, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    q, k, v = _qkv(1, 64, 4, 2, 32, dtype)
+    out = fa_kernel(q, k, v, block_q=32, block_k=32, interpret=True)
+    exp = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [8, 32, 200])
+def test_flash_attention_window(window):
+    q, k, v = _qkv(1, 96, 4, 2, 16, jnp.float32)
+    out = fa_kernel(q, k, v, window=window, block_q=32, block_k=32,
+                    interpret=True)
+    exp = ref.attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(out, exp, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_block_shape_invariance():
+    q, k, v = _qkv(1, 128, 4, 2, 16, jnp.float32)
+    a = fa_kernel(q, k, v, block_q=32, block_k=64, interpret=True)
+    b = fa_kernel(q, k, v, block_q=128, block_k=16, interpret=True)
+    np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_grad_matches_ref():
+    q, k, v = _qkv(1, 48, 2, 2, 8, jnp.float32)
+
+    def f_kernel(q, k, v):
+        return jnp.sum(ops.flash_attention(q, k, v, 0, 16, 16) ** 2)
+
+    def f_ref(q, k, v):
+        return jnp.sum(ref.attention_ref(q, k, v) ** 2)
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(S=st.integers(4, 80), D=st.sampled_from([8, 16]),
+       seed=st.integers(0, 99))
+def test_flash_attention_property(S, D, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, S, 2, D))
+    k = jax.random.normal(ks[1], (1, S, 2, D))
+    v = jax.random.normal(ks[2], (1, S, 2, D))
+    out = fa_kernel(q, k, v, block_q=16, block_k=16, interpret=True)
+    exp = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(out, exp, rtol=3e-5, atol=3e-5)
+    # rows are convex combinations of V rows: bounded by V extremes
+    assert float(jnp.max(out)) <= float(jnp.max(v)) + 1e-4
+    assert float(jnp.min(out)) >= float(jnp.min(v)) - 1e-4
+
+
+# ----------------------------------------------------------------------
+# SSD sweeps
+# ----------------------------------------------------------------------
+def _ssd_inputs(b, S, H, P, N, dtype=jnp.float32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (b, S, H, P)).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, H))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    B = jax.random.normal(ks[3], (b, S, H, N)).astype(dtype)
+    C = jax.random.normal(ks[4], (b, S, H, N)).astype(dtype)
+    return x, dt, A, B, C
+
+
+@pytest.mark.parametrize("S,chunk", [(32, 8), (40, 16), (7, 8), (128, 32)])
+@pytest.mark.parametrize("P,N", [(8, 16), (16, 8)])
+def test_ssd_shapes(S, chunk, P, N):
+    x, dt, A, B, C = _ssd_inputs(2, S, 3, P, N)
+    y, st_out = ssd_kernel(x, dt, A, B, C, chunk=chunk, interpret=True)
+    yr, st_ref = ref.ssd_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(y, yr, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(st_out, st_ref, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_dtypes(dtype):
+    x, dt, A, B, C = _ssd_inputs(1, 32, 2, 8, 16, dtype)
+    y, _ = ssd_kernel(x, dt, A, B, C, chunk=16, interpret=True)
+    yr, _ = ref.ssd_ref(x, dt, A, B, C)
+    tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **tol)
+
+
+def test_ssd_chunk_invariance():
+    x, dt, A, B, C = _ssd_inputs(1, 64, 2, 8, 8)
+    y1, s1 = ssd_kernel(x, dt, A, B, C, chunk=8, interpret=True)
+    y2, s2 = ssd_kernel(x, dt, A, B, C, chunk=32, interpret=True)
+    np.testing.assert_allclose(y1, y2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(s1, s2, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_grad_matches_ref():
+    x, dt, A, B, C = _ssd_inputs(1, 24, 2, 4, 8)
+
+    def f_kernel(*a):
+        y, _ = ops.ssd(*a, 8)
+        return jnp.sum(y ** 2)
+
+    def f_ref(*a):
+        y, _ = ref.ssd_ref(*a)
+        return jnp.sum(y ** 2)
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 3, 4))(x, dt, A, B, C)
+    gr = jax.grad(f_ref, argnums=(0, 1, 3, 4))(x, dt, A, B, C)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(S=st.integers(4, 60), chunk=st.sampled_from([8, 16]),
+       seed=st.integers(0, 99))
+def test_ssd_property(S, chunk, seed):
+    x, dt, A, B, C = _ssd_inputs(1, S, 2, 4, 8, seed=seed)
+    y, st_out = ssd_kernel(x, dt, A, B, C, chunk=chunk, interpret=True)
+    yr, st_ref = ref.ssd_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(y, yr, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(st_out, st_ref, rtol=5e-4, atol=5e-4)
+
+
+def test_model_kernel_path_matches_chunked():
+    """Model(ssd_impl='kernel') == Model(ssd_impl='chunked')."""
+    from repro.configs import get_arch, reduced
+    from repro.models import Model
+    arch = reduced(get_arch("mamba2_780m"), layers=2)
+    mk = Model(arch, dtype=jnp.float32, remat=False, ssd_impl="kernel")
+    mc = Model(arch, dtype=jnp.float32, remat=False, ssd_impl="chunked")
+    params = mk.init(RNG)
+    tokens = jax.random.randint(RNG, (1, 24), 0, arch.vocab_size)
+    lk, _ = mk.forward(params, tokens)
+    lc, _ = mc.forward(params, tokens)
+    np.testing.assert_allclose(lk, lc, rtol=2e-4, atol=2e-4)

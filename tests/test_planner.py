@@ -1,0 +1,92 @@
+"""GPU–stage mapping DP (paper §4.1.2): structure, optimality, memoization."""
+import math
+
+import pytest
+
+from repro.core import PipelinePlanner, build_profile, estimate_iteration_time
+from repro.core.planner import _combine, _min_segments, _Sol
+from repro.configs import get_arch
+
+
+def test_template_structure(small_profile):
+    pl = PipelinePlanner(small_profile, gpus_per_node=1)
+    tpl = pl.plan(4)
+    tpl.validate(small_profile.num_layers)
+    assert tpl.num_stages >= 4           # pigeonhole: >= 1 stage per node
+    assert tpl.num_nodes == 4
+    # stages tile the layer range exactly
+    assert tpl.stages[0].layer_start == 0
+    assert tpl.stages[-1].layer_end == small_profile.num_layers
+
+
+def test_peel_equals_binary(small_profile):
+    """Both division strategies explore the same stage-sequence space."""
+    peel = PipelinePlanner(small_profile, gpus_per_node=1, mode="peel",
+                           max_stages=4).plan(3)
+    binary = PipelinePlanner(small_profile, gpus_per_node=1, mode="binary",
+                             max_stages=4).plan(3)
+    assert math.isclose(peel.iteration_time, binary.iteration_time,
+                        rel_tol=1e-9)
+
+
+def test_homogeneous_closed_form():
+    """For a uniform-cost model, T1+T2+T3 == exact 1F1B makespan
+    (N_b + S - 1)(F+B)."""
+    prof = build_profile(get_arch("gpt2"), microbatch=1, seq_len=128)
+    pl = PipelinePlanner(prof, gpus_per_node=1)
+    tpl = pl.plan(2)
+    s, ts = tpl.num_stages, tpl.stage_times
+    if len(set(round(t, 12) for t in ts)) == 1:  # exactly homogeneous
+        t = ts[0]
+        assert math.isclose(tpl.iteration_time, (4 * s + s - 1) * t, rel_tol=1e-9)
+
+
+def test_multi_gpu_stage_never_straddles_nodes(gpt27_profile):
+    pl = PipelinePlanner(gpt27_profile, gpus_per_node=4)
+    tpl = pl.plan(3)
+    for st in tpl.stages:
+        assert st.gpu_offset + st.num_gpus <= 4
+
+
+def test_memoization_shared_across_templates(gpt27_profile):
+    pl = PipelinePlanner(gpt27_profile, gpus_per_node=1)
+    pl.plan(6)
+    hits_before = len(pl._memo)
+    pl.plan(5)   # should reuse sub-states
+    # planning the smaller template grows the memo only modestly
+    assert len(pl._memo) < hits_before * 2
+
+
+def test_iteration_time_monotone_in_microbatches(gpt27_profile):
+    pl = PipelinePlanner(gpt27_profile, gpus_per_node=1)
+    tpl = pl.plan(4)
+    times = [estimate_iteration_time(tpl, nb) for nb in (4, 8, 16, 64)]
+    assert times == sorted(times)
+
+
+def test_combine_math():
+    # left slower: k* stays left, T3 accumulates right's T1 (Eq. 3 case 1)
+    left = _Sol(0, t1=10.0, t3=4.0, k_star=1, t_max=4.0, cut=None)
+    right = _Sol(0, t1=6.0, t3=2.0, k_star=0, t_max=3.0, cut=None)
+    total, t1, t3, k, tmax = _combine(left, right, s_left=2, s_total=4)
+    assert (t1, t3, k, tmax) == (16.0, 10.0, 1, 4.0)
+    assert total == t1 + (16 - 4 + 1 - 1) * 4.0 + t3
+    # right slower: k* shifts by s_left (Eq. 3 case 2)
+    total, t1, t3, k, tmax = _combine(right, left, s_left=2, s_total=4)
+    assert (k, tmax, t3) == (2 + 1, 4.0, 4.0)
+
+
+def test_min_segments():
+    assert _min_segments(4, 0, 4) == 1
+    assert _min_segments(4, 2, 4) == 2   # 2 in node A + 2 in node B
+    assert _min_segments(8, 0, 4) == 2
+    assert _min_segments(9, 3, 4) == 3   # 1 + 4 + 4
+
+
+def test_more_nodes_not_slower_per_microbatch(gpt27_profile):
+    """Steady-state per-microbatch time should improve with more nodes."""
+    pl = PipelinePlanner(gpt27_profile, gpus_per_node=1)
+    t3 = pl.plan(3)
+    t6 = pl.plan(6)
+    assert (t6.stage_times[t6.slowest_stage]
+            < t3.stage_times[t3.slowest_stage])

@@ -1,0 +1,132 @@
+"""Hypothesis property tests of the paper's guarantees (§3.2, App. A/B)
+and gradient-compression invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.configs import get_arch
+from repro.core import (EngineConfig, OobleckEngine, PlanningError,
+                        build_profile, coverable, generate_node_spec,
+                        layer_groups)
+from repro.runtime.compression import (ErrorFeedback, roundtrip, wire_bytes)
+
+
+@pytest.fixture(scope="module")
+def profile():
+    return build_profile(get_arch("gpt3_2_7b"), microbatch=2, seq_len=1024)
+
+
+# ----------------------------------------------------------------------
+# Theorem B.1 (merge availability)
+# ----------------------------------------------------------------------
+@settings(max_examples=50, deadline=None)
+@given(N=st.integers(8, 40), f=st.integers(1, 3), n0=st.integers(2, 4),
+       k=st.integers(1, 3))
+def test_theorem_b1_merged_template_exists(N, f, n0, k):
+    """Merging a failed (n0-k)-node pipeline with an n0-node one yields
+    2*n0-k nodes; a template must exist for that size whenever the
+    cluster can still hold f+1 replicas."""
+    assume((f + 2) * n0 <= N)         # precondition in the proof
+    assume(k < n0)
+    try:
+        spec = generate_node_spec(N=N, f=f, n0=n0)
+    except PlanningError:
+        assume(False)
+    merged = 2 * n0 - k
+    assert n0 <= merged <= spec.max_size(), (
+        f"no template for merged size {merged}; sizes {spec.sizes}")
+
+
+# ----------------------------------------------------------------------
+# §3.2: worst case f, general case beyond f
+# ----------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_figure2_general_case_beyond_f(profile, seed):
+    """Figure 2b: > f random failures are survivable as long as one copy
+    of every layer remains (engine recovers or raises, never corrupts)."""
+    import random
+    rng = random.Random(seed)
+    eng = OobleckEngine(profile, [f"n{i}" for i in range(13)], EngineConfig(
+        fault_tolerance=2, global_batch=1024, microbatch=2,
+        gpus_per_node=1, n0_override=2))
+    # kill 3 > f = 2 nodes scattered over DIFFERENT pipelines
+    instances = eng.instances
+    assume(len(instances) >= 3)
+    dead = {inst.nodes[0] for inst in rng.sample(instances, 3)}
+    eng.handle_failure(dead)          # must not raise: one copy per layer
+    for g in layer_groups(eng.instances):
+        assert all(len(r) >= 1 for r in g.replicas)
+
+
+def test_figure2_worst_case_stage_wipeout(profile):
+    """Figure 2a: losing every replica of one stage is unrecoverable —
+    the array-level trainer must detect it rather than continue."""
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.configs import reduced
+    from repro.models import Model
+    from repro.optim import adamw
+    from repro.runtime import HeteroTrainer
+
+    arch = reduced(get_arch("gpt3_medium"), layers=4)
+    prof = build_profile(arch, microbatch=2, seq_len=16)
+    eng = OobleckEngine(prof, [f"n{i}" for i in range(4)], EngineConfig(
+        fault_tolerance=1, global_batch=8, microbatch=2, gpus_per_node=1,
+        n0_override=2))
+    model = Model(arch, dtype=jnp.float32, remat=False, attn_impl="naive",
+                  scan_layers=False)
+    trainer = HeteroTrainer(model, eng, model.init(jax.random.PRNGKey(0)),
+                            adamw.AdamWConfig())
+    # both pipelines have 2 nodes; node index 0 of each holds stage 0.
+    dead = {inst.nodes[0] for inst in eng.instances}
+    with pytest.raises((AssertionError, Exception)):
+        trainer.handle_failure(dead)
+
+
+# ----------------------------------------------------------------------
+# Coverage is monotone: adding nodes never breaks instantiability
+# ----------------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(N=st.integers(6, 36), f=st.integers(0, 3))
+def test_coverage_monotone(N, f):
+    n0 = 2
+    assume((f + 1) * n0 <= N)
+    spec = generate_node_spec(N=N, f=f, n0=n0)
+    prev = None
+    for n in range((f + 1) * n0, N + 1):
+        cov = coverable(n, spec)
+        assert cov, f"gap at {n} with sizes {spec.sizes}"
+        prev = cov
+
+
+# ----------------------------------------------------------------------
+# Gradient compression
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("codec,rel_tol", [("bf16", 1e-2), ("int8", 2e-2)])
+def test_codec_roundtrip_error_bounded(codec, rel_tol):
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (256, 64))}
+    rt = roundtrip(g, codec)
+    err = float(jnp.max(jnp.abs(rt["w"] - g["w"])))
+    assert err <= rel_tol * float(jnp.max(jnp.abs(g["w"])))
+    assert wire_bytes(g, codec) < wire_bytes(g, "none")
+
+
+def test_error_feedback_unbiased_over_time():
+    """Sum of compressed grads + final residual == sum of true grads."""
+    ef = ErrorFeedback("int8")
+    key = jax.random.PRNGKey(1)
+    total_true = jnp.zeros((32,))
+    total_sent = jnp.zeros((32,))
+    for i in range(20):
+        key, k = jax.random.split(key)
+        g = {"w": jax.random.normal(k, (32,)) * 0.01}
+        total_true = total_true + g["w"]
+        sent = ef.apply(g)
+        total_sent = total_sent + sent["w"]
+    drift = total_sent + ef.residual["w"] - total_true
+    np.testing.assert_allclose(np.asarray(drift), 0.0, atol=1e-5)

@@ -1,0 +1,123 @@
+"""Dynamic reconfiguration (§5) + engine lifecycle (§3.4) + guarantees (§3.2)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_arch
+from repro.core import (EngineConfig, InsufficientReplicasError,
+                        NodeChangeMonitor, OobleckEngine, build_profile,
+                        verify_replica_coverage)
+
+
+def make_engine(n_nodes=13, f=2, n0=2, gb=1024, mb=2):
+    prof = build_profile(get_arch("gpt3_2_7b"), microbatch=mb, seq_len=2048)
+    nodes = [f"node{i}" for i in range(n_nodes)]
+    return OobleckEngine(prof, nodes, EngineConfig(
+        fault_tolerance=f, global_batch=gb, microbatch=mb,
+        gpus_per_node=1, n0_override=n0))
+
+
+def test_bootstrap_uses_all_nodes():
+    eng = make_engine()
+    assert len(eng.nodes) == 13
+    assert len(eng.instances) >= 3          # f+1
+    assert sum(eng.batch.num_microbatches) * 2 == 1024
+
+
+def test_simple_reinstantiation_figure_8a():
+    eng = make_engine()
+    four = next((i for i in eng.instances if i.template.num_nodes >= 3), None)
+    assert four is not None
+    victim = four.nodes[-1]
+    r = eng.handle_failure({victim})
+    assert r.reinstantiated >= 1
+    assert victim not in eng.nodes
+    assert len(eng.nodes) == 12             # every survivor still used
+    assert verify_replica_coverage(eng.instances)
+
+
+def test_merge_or_borrow_when_below_n0():
+    eng = make_engine()
+    two = next(i for i in eng.instances if i.template.num_nodes == 2)
+    r = eng.handle_failure({two.nodes[0]})
+    assert r.merged + r.borrowed >= 1
+    assert len(eng.nodes) == 12
+    assert verify_replica_coverage(eng.instances)
+
+
+def test_copy_plan_sources_are_survivors():
+    eng = make_engine()
+    dead = {eng.instances[0].nodes[0]}
+    r = eng.handle_failure(dead)
+    for task in r.copy_plan:
+        assert task.src_node not in dead
+        assert task.nbytes > 0
+
+
+def test_batch_redistributed_after_failure():
+    eng = make_engine()
+    r = eng.handle_failure({eng.instances[0].nodes[0]})
+    assert sum(eng.batch.num_microbatches) * 2 == 1024  # global batch constant
+    assert len(eng.batch.num_microbatches) == len(eng.instances)
+
+
+def test_insufficient_replicas_checkpoints_and_raises():
+    hits = []
+    prof = build_profile(get_arch("gpt3_2_7b"), microbatch=2, seq_len=2048)
+    eng = OobleckEngine(prof, [f"n{i}" for i in range(6)], EngineConfig(
+        fault_tolerance=2, global_batch=512, microbatch=2, gpus_per_node=1,
+        n0_override=2), on_checkpoint=lambda: hits.append(1))
+    with pytest.raises(InsufficientReplicasError):
+        eng.handle_failure({"n0"})          # 5 < (f+1)*n0 = 6
+    assert hits == [1]
+    assert eng.stopped
+
+
+def test_f_simultaneous_failures_survivable():
+    """§3.2: up to f simultaneous failures never lose the model."""
+    eng = make_engine(f=2)
+    dead = {eng.instances[0].nodes[0], eng.instances[1].nodes[0]}
+    eng.handle_failure(dead)
+    assert verify_replica_coverage(eng.instances)
+    assert len(eng.instances) >= 1
+
+
+def test_node_join_replans_globally():
+    eng = make_engine()
+    eng.handle_failure({eng.instances[0].nodes[0]})
+    n_before = len(eng.nodes)
+    r = eng.handle_join(["fresh0", "fresh1"])
+    assert len(eng.nodes) == n_before + 2
+    assert r.globally_replanned
+
+
+def test_monitor_dispatch():
+    eng = make_engine()
+    victim = eng.instances[0].nodes[0]
+    eng.monitor.inject(NodeChangeMonitor.FAIL, [victim], time=1.0)
+    eng.monitor.poll(now=2.0)
+    assert victim not in eng.nodes
+    eng.monitor.inject(NodeChangeMonitor.WARN, ["nodeX"], time=3.0)
+    eng.monitor.poll(now=3.0)
+    assert eng.draining
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), kills=st.integers(1, 3))
+def test_random_failure_sequences_keep_invariants(seed, kills):
+    """Property: any sequence of <=f-sized failure batches keeps
+    (a) all surviving nodes in use, (b) full layer coverage,
+    (c) the global batch size constant."""
+    import random
+    rng = random.Random(seed)
+    eng = make_engine(n_nodes=13, f=2)
+    for _ in range(kills):
+        alive = eng.nodes
+        if len(alive) - 2 < 6:              # would cross the floor
+            break
+        dead = set(rng.sample(alive, k=min(2, len(alive))))
+        eng.handle_failure(dead)
+        assert len(eng.nodes) == len(alive) - len(dead)
+        assert verify_replica_coverage(eng.instances)
+        assert sum(eng.batch.num_microbatches) * 2 == 1024
+        for inst in eng.instances:
+            inst.template.validate(eng.profile.num_layers)

@@ -1,0 +1,81 @@
+"""Scale features: 1000-node planning, greedy instantiation, straggler
+rebalancing, elastic joins at scale."""
+import time
+
+import pytest
+
+from repro.configs import get_arch
+from repro.core import (EngineConfig, OobleckEngine, build_profile,
+                        choose_plan, generate_node_spec)
+from repro.core.instantiator import greedy_counts
+from repro.core.planner import PipelinePlanner
+
+
+@pytest.fixture(scope="module")
+def big_profile():
+    return build_profile(get_arch("gpt3_6_7b"), microbatch=2, seq_len=2048)
+
+
+def test_thousand_node_bootstrap_is_fast(big_profile):
+    """Planning + instantiation for 1024 nodes must take seconds, not
+    minutes (paper §7.4: 'Oobleck simply instantiates more of the
+    smaller pipelines' at scale)."""
+    nodes = [f"n{i}" for i in range(1024)]
+    t0 = time.perf_counter()
+    eng = OobleckEngine(big_profile, nodes, EngineConfig(
+        fault_tolerance=3, global_batch=8192, microbatch=2,
+        gpus_per_node=1, n0_override=8, max_stages=12))
+    elapsed = time.perf_counter() - t0
+    assert elapsed < 60, f"bootstrap took {elapsed:.1f}s"
+    assert len(eng.nodes) == 1024          # every node used
+    assert len(eng.instances) >= 4         # f+1
+    # templates capped at the layer count, sizes consecutive
+    assert eng.spec.sizes[0] == 8
+    assert eng.spec.sizes[-1] <= big_profile.num_layers
+
+
+def test_thousand_node_failures(big_profile):
+    nodes = [f"n{i}" for i in range(1024)]
+    eng = OobleckEngine(big_profile, nodes, EngineConfig(
+        fault_tolerance=3, global_batch=8192, microbatch=2,
+        gpus_per_node=1, n0_override=8, max_stages=12))
+    t0 = time.perf_counter()
+    eng.handle_failure({eng.instances[0].nodes[0],
+                        eng.instances[1].nodes[0],
+                        eng.instances[2].nodes[0]})
+    elapsed = time.perf_counter() - t0
+    assert elapsed < 30, f"reconfig took {elapsed:.1f}s"
+    assert len(eng.nodes) == 1021
+
+
+def test_greedy_counts_exact_and_feasible(big_profile):
+    spec = generate_node_spec(N=500, f=3, n0=8, max_size=20)
+    planner = PipelinePlanner(big_profile, gpus_per_node=1, max_stages=12)
+    templates = planner.plan_all(spec.sizes)
+    counts = greedy_counts(tuple(spec.sizes), templates, 500, 4)
+    assert sum(c * s for c, s in zip(counts, spec.sizes)) == 500
+    assert sum(counts) >= 4
+
+
+def test_greedy_matches_exact_on_small(big_profile):
+    """Where exact enumeration is tractable, greedy must stay within 10%
+    throughput of the optimum."""
+    spec = generate_node_spec(N=40, f=2, n0=8, max_size=16)
+    planner = PipelinePlanner(big_profile, gpus_per_node=1, max_stages=12)
+    templates = planner.plan_all(spec.sizes)
+    exact = choose_plan(templates, spec, 40, 4096, 2, exact_threshold=64)
+    greedy = choose_plan(templates, spec, 40, 4096, 2, exact_threshold=1)
+    assert greedy.throughput >= 0.9 * exact.throughput
+
+
+def test_straggler_rebalance(big_profile):
+    eng = OobleckEngine(big_profile, [f"n{i}" for i in range(40)],
+                        EngineConfig(fault_tolerance=2, global_batch=4096,
+                                     microbatch=2, gpus_per_node=1,
+                                     n0_override=8, max_stages=12))
+    base = eng.batch.num_microbatches
+    # pipeline 0 observed 3x slower than the rest
+    times = [3.0] + [1.0] * (len(base) - 1)
+    plan = eng.rebalance(times)
+    assert sum(plan.num_microbatches) == sum(base)
+    assert plan.num_microbatches[0] < min(plan.num_microbatches[1:])

@@ -1,0 +1,130 @@
+"""Discrete-event simulator + policy tests (paper §7 reproduction claims)."""
+import pytest
+
+from repro.configs import get_arch
+from repro.core import build_profile
+from repro.sim import (BambooPolicy, OobleckPolicy, PolicyStopped,
+                       VarunaPolicy, controlled_failures, run_sim,
+                       spot_trace)
+
+NODES = [f"n{i}" for i in range(30)]
+
+
+def prof(model="gpt3_2_7b", mb=2, seq=1024):
+    return build_profile(get_arch(model), microbatch=mb, seq_len=seq)
+
+
+def make_policies(p, gb=1024, mb=2):
+    return {
+        "oobleck": OobleckPolicy(p, NODES, f=2, global_batch=gb,
+                                 microbatch=mb, max_stages=12),
+        "varuna": VarunaPolicy(p, NODES, global_batch=gb, microbatch=mb,
+                               max_stages=12),
+        "bamboo": BambooPolicy(p, NODES, global_batch=gb, microbatch=mb,
+                               max_stages=12),
+    }
+
+
+def test_no_failures_all_run_and_oobleck_competitive():
+    p = prof()
+    pols = make_policies(p)
+    res = {k: run_sim(v, [], 3600.0, 1024) for k, v in pols.items()
+           if v.runnable()}
+    assert res["oobleck"].throughput > 0
+    # without failures, Oobleck >= Varuna (same planner, no grid waste)
+    assert res["oobleck"].throughput >= 0.95 * res["varuna"].throughput
+
+
+def test_oobleck_degrades_gracefully_with_failure_rate():
+    p = prof()
+    outs = []
+    for interval in (6 * 3600, 600):
+        trace = controlled_failures(NODES, interval, stop_at=15)
+        pol = OobleckPolicy(p, NODES, f=2, global_batch=1024, microbatch=2,
+                            max_stages=12)
+        res = run_sim(pol, trace, interval * 17, 1024, min_nodes=15)
+        outs.append(res.throughput)
+    # 36x more failures must cost Oobleck < 15% throughput (paper: ~2%)
+    assert outs[1] > 0.85 * outs[0]
+
+
+def test_varuna_hurts_more_at_high_failure_rate():
+    p = prof()
+    t_low, t_high = {}, {}
+    for store, interval in ((t_low, 6 * 3600), (t_high, 600)):
+        trace = controlled_failures(NODES, interval, stop_at=15)
+        for name, pol in make_policies(p).items():
+            if not pol.runnable():
+                continue
+            store[name] = run_sim(pol, trace, interval * 17, 1024,
+                                  min_nodes=15).throughput
+    oob_drop = t_high["oobleck"] / t_low["oobleck"]
+    var_drop = t_high["varuna"] / t_low["varuna"]
+    assert oob_drop > var_drop, (oob_drop, var_drop)
+
+
+def test_bamboo_oom_large_models():
+    p = prof("gpt3_6_7b", mb=2, seq=2048)
+    pol = BambooPolicy(p, NODES, global_batch=1024, microbatch=2,
+                       max_stages=12)
+    assert not pol.runnable()           # paper Table 1: X for GPT-3 models
+    res = run_sim(pol, [], 3600.0, 1024)
+    assert res.stopped_reason == "OOM"
+    assert res.throughput == 0.0
+
+
+def test_bamboo_fixed_overhead_without_failures():
+    p = prof("bert_large", mb=4, seq=512)
+    bam = BambooPolicy(p, NODES, global_batch=8192, microbatch=4,
+                       max_stages=12)
+    oob = OobleckPolicy(p, NODES, f=2, global_batch=8192, microbatch=32,
+                        max_stages=12)
+    r_b = run_sim(bam, [], 3600.0, 8192)
+    r_o = run_sim(oob, [], 3600.0, 8192)
+    # RC overhead: Bamboo clearly slower even with zero failures (§2.3)
+    assert r_b.throughput < 0.8 * r_o.throughput
+
+
+def test_varuna_rollback_loses_progress():
+    p = prof()
+    interval = 600.0
+    trace = controlled_failures(NODES, interval, stop_at=25)
+    pol = VarunaPolicy(p, NODES, global_batch=1024, microbatch=2,
+                       max_stages=12)
+    res = run_sim(pol, trace, interval * 8, 1024, min_nodes=25)
+    assert res.breakdown["downtime"] > 0
+    assert res.breakdown["ckpt"] > 0
+    assert res.effective_fraction() < 1.0
+
+
+def test_oobleck_stops_below_floor():
+    p = prof()
+    pol = OobleckPolicy(p, NODES[:10], f=1, global_batch=1024, microbatch=2,
+                        n0=4, max_stages=12)
+    trace = controlled_failures(NODES[:10], 100.0, stop_at=5)
+    res = run_sim(pol, trace, 1e6, 1024)
+    assert res.stopped_reason is not None
+
+
+def test_spot_trace_shapes():
+    trace = spot_trace(NODES, horizon=3600.0, mean_preempt=300.0,
+                       mean_recover=600.0, seed=3)
+    assert trace, "trace should contain events"
+    times = [e.time for e in trace]
+    assert times == sorted(times)
+    assert {e.kind for e in trace} <= {"fail", "join"}
+
+
+def test_spot_replay_all_policies_survive():
+    p = prof("bert_large", mb=32, seq=512)
+    trace = spot_trace(NODES, horizon=4 * 3600.0, mean_preempt=7.7 * 60,
+                       mean_recover=15 * 60, seed=11, min_alive=10)
+    pols = make_policies(p, gb=8192, mb=32)
+    # Bamboo runs at ITS Table-1 microbatch (4): RC + no-remat memory
+    pols["bamboo"] = BambooPolicy(prof("bert_large", mb=4, seq=512), NODES,
+                                  global_batch=8192, microbatch=4,
+                                  max_stages=12)
+    for name, pol in pols.items():
+        res = run_sim(pol, trace, 4 * 3600.0, 8192)
+        assert res.throughput > 0, name
+        assert res.events_handled > 0, name

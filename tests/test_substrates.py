@@ -1,0 +1,180 @@
+"""Substrate tests: 1F1B schedule, optimizer, data pipeline, checkpoint."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_arch, reduced
+from repro.core import PipelinePlanner, build_profile, estimate_iteration_time
+from repro.data import ByteCorpus, DataCursor, GlobalBatchDispenser, SyntheticLM
+from repro.models import Model
+from repro.optim import adamw
+from repro.runtime.schedule import flat_schedule, one_f_one_b, simulate_makespan
+
+
+# ----------------------------------------------------------------------
+# 1F1B schedule
+# ----------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(S=st.integers(1, 6), M=st.integers(1, 12))
+def test_1f1b_complete_and_dependency_safe(S, M):
+    per_stage = one_f_one_b(S, M)
+    for ops in per_stage:
+        fs = [mb for op, mb in ops if op == "F"]
+        bs = [mb for op, mb in ops if op == "B"]
+        assert fs == list(range(M)) and bs == list(range(M))
+        # in-flight microbatches never exceed the 1F1B bound
+        inflight = 0
+        peak = 0
+        for op, mb in ops:
+            inflight += 1 if op == "F" else -1
+            peak = max(peak, inflight)
+        assert peak <= min(S, M) + 1
+    flat = flat_schedule(S, M)  # raises on deadlock
+    assert len(flat) == 2 * S * M
+
+
+def test_makespan_matches_planner_estimate():
+    """For homogeneous stages the planner's T1+T2+T3 must equal the
+    event-driven 1F1B makespan (both equal (N_b + S - 1)(F + B))."""
+    f, b = 2.0, 4.0
+    for S in (2, 3, 5):
+        nb = 4 * S
+        got = simulate_makespan([f] * S, [b] * S, nb)
+        assert abs(got - (nb + S - 1) * (f + b)) < 1e-9
+
+
+def test_makespan_planner_consistency_real_profile(gpt27_profile):
+    pl = PipelinePlanner(gpt27_profile, gpus_per_node=1)
+    tpl = pl.plan(4)
+    nb = 4 * tpl.num_stages
+    fwd = [gpt27_profile.stage_fwd(s.layer_start, s.layer_end, s.num_gpus)
+           for s in tpl.stages]
+    bwd = [gpt27_profile.stage_bwd(s.layer_start, s.layer_end, s.num_gpus)
+           for s in tpl.stages]
+    sim = simulate_makespan(fwd, bwd, nb)
+    est = estimate_iteration_time(tpl, nb)
+    # the analytic critical path is a (tight-ish) estimate of the event sim
+    assert 0.5 * sim <= est <= 1.5 * sim
+
+
+# ----------------------------------------------------------------------
+# Optimizer
+# ----------------------------------------------------------------------
+def test_adamw_descends_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, warmup_steps=0, weight_decay=0.0,
+                            clip_norm=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = adamw.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw.apply(cfg, params, grads, state)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.05
+
+
+def test_adamw_clip():
+    cfg = adamw.AdamWConfig(lr=0.1, clip_norm=1.0, warmup_steps=0)
+    grads = {"w": jnp.array([300.0, 400.0])}
+    clipped, norm = adamw.clip_by_global_norm(grads, 1.0)
+    assert abs(float(norm) - 500.0) < 1e-3
+    assert abs(float(jnp.linalg.norm(clipped["w"])) - 1.0) < 1e-5
+
+
+def test_schedule_warmup_and_cosine():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                            min_lr_ratio=0.1)
+    lr0 = float(adamw.schedule(cfg, jnp.int32(1)))
+    lr10 = float(adamw.schedule(cfg, jnp.int32(10)))
+    lr100 = float(adamw.schedule(cfg, jnp.int32(100)))
+    assert lr0 < lr10
+    assert abs(lr10 - 1.0) < 1e-6
+    assert abs(lr100 - 0.1) < 1e-6
+
+
+# ----------------------------------------------------------------------
+# Data pipeline
+# ----------------------------------------------------------------------
+def test_synthetic_deterministic():
+    src = SyntheticLM(100, 8, seed=4)
+    a = src.sample(42)
+    b = src.sample(42)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(src.sample(42), src.sample(43))
+
+
+def test_dispenser_exactly_once_under_resplit():
+    src = SyntheticLM(100, 8, seed=4)
+    disp = GlobalBatchDispenser(src)
+    seen = []
+    for sizes in [(4, 4, 8), (6, 10), (16,), (2, 2, 2, 10)]:
+        batches = disp.next_step(sizes)
+        assert [b["tokens"].shape[0] for b in batches] == list(sizes)
+        seen += [i for b in batches for i in b["_indices"]]
+    assert sorted(seen) == list(range(64))
+
+
+def test_dispenser_rewind_and_restore():
+    src = SyntheticLM(100, 8)
+    disp = GlobalBatchDispenser(src)
+    disp.next_step((8,))
+    disp.rewind(8)                   # lost iteration retried
+    state = disp.state()
+    again = disp.next_step((8,))
+    assert list(again[0]["_indices"]) == list(range(8))
+    disp2 = GlobalBatchDispenser(src)
+    disp2.restore(state)
+    assert disp2.cursor.next_index == state["next_index"]
+
+
+def test_byte_corpus():
+    corpus = ByteCorpus(b"the quick brown fox jumps over the lazy dog " * 10,
+                        seq_len=16)
+    b = corpus.batch([0, 1, 2])
+    assert b["tokens"].shape == (3, 16)
+    assert b["tokens"].max() < 256
+
+
+# ----------------------------------------------------------------------
+# Checkpoint
+# ----------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.ckpt import CheckpointManager, TrainState
+    arch = reduced(get_arch("gpt3_medium"), layers=3)
+    model = Model(arch, dtype=jnp.float32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw.init(params)
+    mgr = CheckpointManager(str(tmp_path), num_layers=arch.num_layers,
+                            async_mode=False)
+    mgr.save(TrainState(step=7, params=params, opt_state=opt,
+                        data_state={"next_index": 123}, rng_seed=5))
+    assert mgr.list_steps() == [7]
+    restored = mgr.restore(params, opt)
+    assert restored.step == 7
+    assert restored.data_state["next_index"] == 123
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    from repro.ckpt import CheckpointManager, TrainState
+    arch = reduced(get_arch("gpt3_medium"), layers=2)
+    model = Model(arch, dtype=jnp.float32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw.init(params)
+    mgr = CheckpointManager(str(tmp_path), num_layers=2, async_mode=True,
+                            keep=2)
+    for step in (1, 2, 3):
+        mgr.save(TrainState(step, params, opt, {"next_index": 0}, 0))
+    mgr.wait()
+    assert mgr.list_steps() == [2, 3]       # keep=2 garbage-collects step 1
+
+
+def test_checkpoint_partial_write_invisible(tmp_path):
+    """A step directory without MANIFEST.json must be ignored."""
+    from repro.ckpt import CheckpointManager
+    os.makedirs(tmp_path / "step_00000009")
+    mgr = CheckpointManager(str(tmp_path), num_layers=1)
+    assert mgr.list_steps() == []

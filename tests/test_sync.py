@@ -1,0 +1,61 @@
+"""Layer-granularity gradient sync planning (paper §6.1, Figure 9)."""
+from repro.configs import get_arch
+from repro.core import (EngineConfig, OobleckEngine, build_profile,
+                        build_sync_plan, layer_groups)
+
+
+def make_engine():
+    prof = build_profile(get_arch("gpt3_2_7b"), microbatch=2, seq_len=2048)
+    return OobleckEngine(prof, [f"node{i}" for i in range(13)], EngineConfig(
+        fault_tolerance=2, global_batch=1024, microbatch=2,
+        gpus_per_node=1, n0_override=2))
+
+
+def test_every_layer_has_every_replica():
+    eng = make_engine()
+    for g in layer_groups(eng.instances):
+        assert len(g.replicas) == len(eng.instances)
+        assert all(len(r) >= 1 for r in g.replicas)
+
+
+def test_figure9_heterogeneous_peers():
+    """A layer whose stage boundaries differ across pipelines still gets a
+    peer group containing exactly one owner per replica (Fig. 9)."""
+    eng = make_engine()
+    hetero = [g for g in layer_groups(eng.instances)
+              if len({tuple(r) for r in g.replicas}) > 1]
+    assert hetero, "13-node plan must include heterogeneous pipelines"
+    for g in hetero:
+        for grp in g.peer_groups():
+            assert len(grp) == len(eng.instances)
+
+
+def test_buckets_tile_layers_deepest_first():
+    eng = make_engine()
+    layer_bytes = [l.param_bytes for l in eng.profile.layers]
+    plan = build_sync_plan(eng.instances, layer_bytes)
+    # deepest-first ordering, contiguous tiling of [0, L)
+    spans = [(b.layer_start, b.layer_end) for b in plan]
+    assert spans[0][1] == eng.profile.num_layers
+    assert spans[-1][0] == 0
+    covered = sorted(l for s, e in spans for l in range(s, e))
+    assert covered == list(range(eng.profile.num_layers))
+
+
+def test_bucket_cap_respected():
+    eng = make_engine()
+    layer_bytes = [l.param_bytes for l in eng.profile.layers]
+    cap = 32 * 1024 * 1024
+    plan = build_sync_plan(eng.instances, layer_bytes, bucket_cap_bytes=cap)
+    for b in plan:
+        assert b.nbytes <= max(cap, max(layer_bytes))  # single huge layer ok
+
+
+def test_sync_groups_shrink_after_failure():
+    eng = make_engine()
+    n_replicas = len(eng.instances)
+    # kill one whole pipeline (its nodes) -> every layer loses one replica
+    victim = eng.instances[-1]
+    eng.handle_failure(set(victim.nodes))
+    for g in layer_groups(eng.instances):
+        assert len(g.replicas) <= n_replicas

@@ -1,0 +1,57 @@
+"""Node-spec generation + Frobenius coverage guarantee (paper §4.1.1, App. A)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PlanningError, coverable, generate_node_spec
+
+
+def test_paper_example_spec():
+    # Figure 4: N=13, f mentioned via examples; templates 2,3,4 is a valid
+    # subset; our generator takes the largest p: sizes n0..N-f*n0.
+    spec = generate_node_spec(N=13, f=2, n0=2)
+    assert spec.sizes[0] == 2
+    assert spec.sizes == tuple(range(2, 13 - 2 * 2 + 1))
+    assert spec.p == len(spec.sizes)
+
+
+def test_consecutive_sizes_property():
+    spec = generate_node_spec(N=30, f=3, n0=4)
+    diffs = {b - a for a, b in zip(spec.sizes, spec.sizes[1:])}
+    assert diffs == {1}
+    assert spec.max_size() == 30 - 3 * 4
+
+
+def test_too_small_cluster_raises():
+    with pytest.raises(PlanningError):
+        generate_node_spec(N=5, f=2, n0=2)  # needs >= 6
+
+
+def test_invalid_inputs():
+    with pytest.raises(PlanningError):
+        generate_node_spec(N=10, f=-1, n0=2)
+    with pytest.raises(PlanningError):
+        generate_node_spec(N=10, f=0, n0=0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(N=st.integers(4, 40), f=st.integers(0, 4), n0=st.integers(1, 5))
+def test_theorem_a1_every_feasible_count_coverable(N, f, n0):
+    """Thm A.1: every N' in [(f+1)*n0, N] is a sum of >= f+1 template
+    sizes.  This is THE fault-tolerance guarantee of the paper."""
+    if (f + 1) * n0 > N:
+        with pytest.raises(PlanningError):
+            generate_node_spec(N=N, f=f, n0=n0)
+        return
+    try:
+        spec = generate_node_spec(N=N, f=f, n0=n0)
+    except PlanningError:
+        return  # p <= n0-1 edge rejected with exhaustive check — acceptable
+    for n_prime in range((f + 1) * n0, N + 1):
+        assert coverable(n_prime, spec), (
+            f"N'={n_prime} not coverable with sizes {spec.sizes}, f={f}")
+
+
+def test_below_floor_not_coverable():
+    spec = generate_node_spec(N=13, f=2, n0=2)
+    assert not coverable(5, spec)   # < (f+1)*n0 = 6
+    assert coverable(6, spec)
