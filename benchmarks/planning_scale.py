@@ -1,0 +1,95 @@
+"""Planner + reconfiguration scaling to hundred-node clusters.
+
+Not a paper table — the paper's evaluation stops at 30 nodes (Table 3
+plans at most 13x8 GPUs).  This suite tracks the two latencies that
+matter for resilience at scale:
+
+  * ``scale/plan_all/n{N}/{mode}``   — wall-clock to plan the FULL
+    consecutive template set for an N-node cluster (the §4.1 offline
+    phase: what a job pays once at submission).  ``fast`` is the
+    vectorized DP, ``peel`` the dominance-pruned scalar recursion.
+  * ``scale/bootstrap/n{N}``         — engine construction end-to-end
+    (node spec + templates + instantiation + batch planning).
+  * ``scale/reconfig/n{N}/...``      — wall-clock of the reconfiguration
+    decision (template lookup + borrow/merge + copy plan + batch
+    redistribution) for a correlated rack burst and a preemption wave,
+    plus the estimated downtime seconds from the copy plan (derived
+    column) — the §5 claim that recovery stays instant at any size.
+
+The acceptance bar tracked by tests/test_planner_fast.py: the 128-node
+template set must plan in under 30 s.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from benchmarks.common import Csv, timed
+from repro.configs import get_arch
+from repro.core import (EngineConfig, OobleckEngine, PipelinePlanner,
+                        build_profile, generate_node_spec)
+
+CLUSTERS = (16, 32, 64, 128)
+RACK = 8                     # nodes per failure domain
+LAYERS = 130                 # blocks; profile adds embed + head
+
+
+def profile_with_layers(layers: int):
+    arch = dataclasses.replace(get_arch("gpt2"), name=f"gpt2_L{layers}",
+                               num_layers=layers)
+    return build_profile(arch, microbatch=2, seq_len=1024)
+
+
+def main(csv: Csv | None = None) -> None:
+    csv = csv or Csv()
+    prof = profile_with_layers(LAYERS)
+
+    for n in CLUSTERS:
+        spec = generate_node_spec(N=n, f=1, n0=4, max_size=prof.num_layers)
+        for mode in ("peel", "fast"):
+            planner = PipelinePlanner(prof, gpus_per_node=1, mode=mode)
+            _, us = timed(lambda: planner.plan_all(spec.sizes))
+            csv.add(f"scale/plan_all/n{n}/{mode}", us,
+                    f"{us / 1e6:.3f}s/{len(spec.sizes)}tpl")
+
+        nodes = [f"n{i}" for i in range(n)]
+        t0 = time.perf_counter()
+        eng = OobleckEngine(prof, nodes, EngineConfig(
+            fault_tolerance=1, global_batch=4096, microbatch=2,
+            gpus_per_node=1, n0_override=4))
+        csv.add(f"scale/bootstrap/n{n}",
+                (time.perf_counter() - t0) * 1e6,
+                f"{eng.metrics.planning_seconds:.3f}s")
+
+        # correlated rack burst: one failure domain dies at once
+        rack = set(nodes[:min(RACK, n // 4)])
+        result, us = timed(lambda: eng.handle_failure(set(rack)))
+        csv.add(f"scale/reconfig/n{n}/rack{len(rack)}", us,
+                f"{eng.reconfiguration_seconds(result):.2f}s_downtime")
+
+        # preemption wave: 10% of the survivors vanish together
+        wave = set(eng.nodes[:: max(1, len(eng.nodes) // max(1, n // 10))]
+                   [:n // 10])
+        if wave:
+            result, us = timed(lambda: eng.handle_failure(set(wave)))
+            csv.add(f"scale/reconfig/n{n}/wave{len(wave)}", us,
+                    f"{eng.reconfiguration_seconds(result):.2f}s_downtime")
+
+        # capacity returns: the rack is repaired and rejoins
+        result, us = timed(lambda: eng.handle_join(sorted(rack)))
+        csv.add(f"scale/rejoin/n{n}/{len(rack)}", us,
+                f"{eng.reconfiguration_seconds(result):.2f}s_downtime")
+
+    # multi-GPU nodes: the (s, k, m) scan explodes for the scalar DP —
+    # this is where the vectorized rows pay off hardest
+    prof4 = profile_with_layers(64)
+    for n in (8, 16):
+        for mode in ("peel", "fast"):
+            planner = PipelinePlanner(prof4, gpus_per_node=4, mode=mode)
+            _, us = timed(lambda: planner.plan(n))
+            csv.add(f"scale/plan_multigpu/n{n}/g4/{mode}", us,
+                    f"{us / 1e6:.3f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,7 @@ Emits ``name,us_per_call,derived`` CSV rows:
   fig10_spot_traces  — Figure 10 / Appendix C (spot instance replay)
   fig11_breakdown    — Figure 11 (time-occupation breakdown)
   roofline_report    — §Roofline terms from the dry-run artifact
+  planning_scale     — beyond-paper: planner/reconfig latency vs cluster size
 """
 from __future__ import annotations
 
@@ -18,8 +19,9 @@ from benchmarks.common import Csv
 
 def main() -> None:
     from benchmarks import (fig10_spot_traces, fig11_breakdown,
-                            roofline_report, table2_throughput,
-                            table3_planning, table4_ckpt_ablation)
+                            planning_scale, roofline_report,
+                            table2_throughput, table3_planning,
+                            table4_ckpt_ablation)
     only = sys.argv[1] if len(sys.argv) > 1 else None
     suites = {
         "table2": table2_throughput.main,
@@ -28,7 +30,12 @@ def main() -> None:
         "fig10": fig10_spot_traces.main,
         "fig11": fig11_breakdown.main,
         "roofline": roofline_report.main,
+        "planning_scale": planning_scale.main,
     }
+    if only is not None and only not in suites:
+        print(f"unknown suite {only!r}; choose from: {', '.join(suites)}",
+              file=sys.stderr)
+        raise SystemExit(2)
     csv = Csv()
     print("name,us_per_call,derived")
     for name, fn in suites.items():

@@ -14,6 +14,9 @@ from repro.configs import get_arch
 from repro.core import PipelinePlanner, build_profile
 
 GRID_NODES = (8, 16, 24)
+#: extra sizes only the vectorized DP visits in reasonable time — the
+#: scale axis feeding the perf trajectory (see also planning_scale.py)
+GRID_NODES_FAST = (8, 16, 24, 48)
 GRID_GPUS = (1, 4)
 GRID_LAYERS = (24, 32, 64)
 
@@ -31,7 +34,7 @@ def main(csv: Csv | None = None) -> None:
         for gpus in GRID_GPUS:
             for n in GRID_NODES:
                 planner = PipelinePlanner(prof, gpus_per_node=gpus,
-                                          max_stages=2 * n)
+                                          mode="peel", max_stages=2 * n)
                 tpl, us = timed(lambda: planner.plan(n))
                 csv.add(f"table3/plan/L{layers}/n{n}/g{gpus}", us,
                         f"{us / 1e6:.3f}s")
@@ -39,6 +42,17 @@ def main(csv: Csv | None = None) -> None:
                 _, us2 = timed(lambda: planner.plan(n - 1))
                 csv.add(f"table3/plan_memoized/L{layers}/n{n - 1}/g{gpus}",
                         us2, f"{us2 / 1e6:.3f}s")
+            for n in GRID_NODES_FAST:
+                if prof.num_layers < n:
+                    continue
+                # fresh planner per n with the same max_stages cap as the
+                # peel rows: cold latency over the identical search space
+                # (warm reuse is `plan_memoized`'s job)
+                fast = PipelinePlanner(prof, gpus_per_node=gpus,
+                                       mode="fast", max_stages=2 * n)
+                _, us = timed(lambda: fast.plan(n))
+                csv.add(f"table3/plan_fast/L{layers}/n{n}/g{gpus}", us,
+                        f"{us / 1e6:.3f}s")
 
 
 if __name__ == "__main__":

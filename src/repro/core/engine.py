@@ -42,7 +42,7 @@ class EngineConfig:
     microbatch: int
     gpus_per_node: int = 1
     n0_override: Optional[int] = None    # force n0 (tests / experiments)
-    planner_mode: str = "peel"
+    planner_mode: str = "fast"
     max_stages: Optional[int] = None
     bucket_cap_bytes: int = 64 * 1024 * 1024
 
@@ -67,7 +67,10 @@ class OobleckEngine:
         self.monitor.subscribe(self._on_event)
         self.on_checkpoint = on_checkpoint
         self.metrics = EngineMetrics()
-        self.draining = False
+        # nodes with a pending preemption warning: the runtime finishes
+        # the in-flight iteration before they leave, so their eventual
+        # failure loses no work (truthy iff a drain is pending)
+        self.draining: Set[str] = set()
         self.stopped = False
 
         t0 = _time.perf_counter()
@@ -96,6 +99,10 @@ class OobleckEngine:
                 size, node_list[cursor:cursor + size]))
             cursor += size
         self.batch: BatchPlan = plan.batch
+        # alive-but-idle nodes no template combination currently covers
+        # (capped-gap merges, joins beyond N); folded back into the pool
+        # at the next reconfiguration
+        self.spare_nodes: List[str] = []
         self.last_reconfig: Optional[ReconfigResult] = None
 
     # ------------------------------------------------------------------
@@ -142,19 +149,30 @@ class OobleckEngine:
     # ------------------------------------------------------------------
     def _on_event(self, ev: ClusterEvent) -> None:
         if ev.kind == NodeChangeMonitor.WARN:
-            self.draining = True
+            self.draining |= set(ev.nodes)
             return
         if ev.kind == NodeChangeMonitor.FAIL:
-            self.handle_failure(set(ev.nodes))
+            # the monitor path cannot say whether the drain finished, so
+            # assume it did iff every victim had a pending warning; the
+            # simulator/runtime call handle_failure directly with the
+            # ground truth instead
+            self.handle_failure(set(ev.nodes),
+                                drained=set(ev.nodes) <= self.draining)
         elif ev.kind == NodeChangeMonitor.JOIN:
             self.handle_join(list(ev.nodes))
 
-    def handle_failure(self, dead: Set[str]) -> ReconfigResult:
+    def handle_failure(self, dead: Set[str],
+                       drained: bool = False) -> ReconfigResult:
+        """Remove ``dead`` nodes and reconfigure.  ``drained=True`` marks
+        a proactive removal after a preemption warning: the in-flight
+        iteration completed before the nodes left, so no work is lost."""
+        self.spare_nodes = [n for n in self.spare_nodes if n not in dead]
         dead = {d for d in dead if d in set(self.nodes)}
         if not dead:
             return ReconfigResult(self.instances, [], self.batch)
         try:
-            result = self.reconf.on_failure(self.instances, dead)
+            result = self.reconf.on_failure(self.instances, dead,
+                                            spares=self.spare_nodes)
         except InsufficientReplicasError:
             self.stopped = True
             self.metrics.restarts += 1
@@ -165,8 +183,11 @@ class OobleckEngine:
         self.batch = result.batch
         self.metrics.reconfigurations += 1
         self.metrics.total_copy_bytes += result.copy_bytes()
-        self.metrics.lost_iterations += 1  # the in-flight iteration is lost
+        if not drained:
+            self.metrics.lost_iterations += 1  # in-flight iteration lost
         self.last_reconfig = result
+        self.spare_nodes = list(result.spare_nodes)
+        self.draining -= dead              # their warning is resolved
         return result
 
     def rebalance(self, observed_times: Sequence[float]) -> BatchPlan:
@@ -183,10 +204,14 @@ class OobleckEngine:
         return self.batch
 
     def handle_join(self, new_nodes: List[str]) -> ReconfigResult:
-        result = self.reconf.on_join(self.instances, new_nodes)
+        pool = list(new_nodes) + [n for n in self.spare_nodes
+                                  if n not in set(new_nodes)]
+        result = self.reconf.on_join(self.instances, pool)
         self.instances = result.instances
         self.batch = result.batch
         self.metrics.reconfigurations += 1
         self.metrics.total_copy_bytes += result.copy_bytes()
         self.last_reconfig = result
+        self.spare_nodes = list(result.spare_nodes)
+        self.draining -= set(new_nodes)    # a returning node isn't leaving
         return result

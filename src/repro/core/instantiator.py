@@ -115,8 +115,13 @@ def greedy_counts(sizes: Tuple[int, ...], templates: Dict[int, PipelineTemplate]
 def choose_plan(templates: Dict[int, PipelineTemplate], spec: NodeSpec,
                 num_nodes: int, global_batch: int, microbatch: int,
                 limit: int = 200_000,
-                exact_threshold: int = 64) -> InstantiationPlan:
-    """Pick the max-throughput feasible instantiation for ``num_nodes``."""
+                exact_threshold: int = 32) -> InstantiationPlan:
+    """Pick the max-throughput feasible instantiation for ``num_nodes``.
+
+    Above ``exact_threshold`` nodes the number of restricted partitions —
+    and with it the cost of evaluating every feasible set — explodes, so
+    the greedy decomposition takes over (within 10% of exact on the sizes
+    where both are tractable; see tests/test_scale.py)."""
     sizes = tuple(spec.sizes)
     if num_nodes > exact_threshold:
         feasible = [greedy_counts(sizes, templates, num_nodes, spec.f + 1)]

@@ -74,10 +74,10 @@ class ReconfigResult:
     borrowed: int = 0
     reinstantiated: int = 0
     globally_replanned: bool = False
-    # nodes left idle because no template combination covers them (only
-    # possible when joins push the cluster beyond the original N — the
-    # §4.1.1 guarantee covers any count <= N; spares rejoin on the next
-    # reconfiguration)
+    # nodes left idle because no template combination covers them: joins
+    # pushing the cluster beyond the original N (the §4.1.1 guarantee
+    # covers any count <= N), or a burst-merged pool landing in a gap of
+    # a capped template set; spares rejoin on the next reconfiguration
     spare_nodes: List[str] = dataclasses.field(default_factory=list)
 
     def copy_bytes(self) -> int:
@@ -105,11 +105,17 @@ class Reconfigurator:
 
     # ------------------------------------------------------------------
     def on_failure(self, instances: Sequence[PipelineInstance],
-                   dead_nodes: Set[str]) -> ReconfigResult:
+                   dead_nodes: Set[str],
+                   spares: Sequence[str] = ()) -> ReconfigResult:
+        """React to ``dead_nodes`` leaving.  ``spares`` are alive idle
+        nodes from an earlier reconfiguration; they enter the recovery
+        pool like the survivors of a damaged pipeline, so they rejoin
+        service whenever a covering combination exists."""
         spec = self.spec
+        spares = [n for n in spares if n not in dead_nodes]
         survivors: List[List[str]] = [
             [n for n in inst.nodes if n not in dead_nodes] for inst in instances]
-        total = sum(len(s) for s in survivors)
+        total = sum(len(s) for s in survivors) + len(spares)
         if total < (spec.f + 1) * spec.n0:
             raise InsufficientReplicasError(
                 f"{total} nodes < (f+1)*n0 = {(spec.f + 1) * spec.n0}; "
@@ -125,6 +131,8 @@ class Reconfigurator:
                 healthy.append((inst, nodes))
             elif nodes:
                 damaged.append(nodes)
+        if spares:
+            damaged.append(list(spares))
         # Damaged pipelines with zero survivors simply disappear.
 
         new_instances: List[PipelineInstance] = [inst for inst, _ in healthy]
@@ -184,14 +192,30 @@ class Reconfigurator:
                 pool.extend(victim.nodes)
                 result.merged += 1
             size = len(pool)
-            if size not in self.templates:
-                # merged size exceeding n_max contradicts Thm B.1 unless the
-                # caller's template set is inconsistent.
-                raise PlanningError(
-                    f"no template for merged pipeline of {size} nodes "
-                    f"(have {sorted(self.templates)}) — violates Thm B.1 "
-                    "preconditions")
-            new_instances.append(self._instantiate(size, pool))
+            if size in self.templates:
+                new_instances.append(self._instantiate(size, pool))
+            else:
+                # Thm B.1 guarantees a template for a merge of TWO pipelines
+                # below n_max, but a correlated burst (whole-rack failure,
+                # preemption wave) can leave a pool larger than the largest
+                # template after several absorptions.  Split the pool back
+                # into covered sizes instead of giving up — fewest pipelines
+                # first, so the merged capacity stays in deep/fast pipelines.
+                # A capped template set (sizes n0..n_max with n_max < 2n0-1)
+                # has gaps no decomposition covers; then the largest
+                # coverable prefix runs and the remainder waits as hot
+                # spares for the next join/reconfiguration.
+                parts, use = self._decompose_prefix(size)
+                if not parts:
+                    raise InsufficientReplicasError(
+                        f"merged pool of {size} nodes is below every "
+                        f"template size {sorted(self.templates)}")
+                cursor = 0
+                for part in parts:
+                    new_instances.append(
+                        self._instantiate(part, pool[cursor:cursor + part]))
+                    cursor += part
+                result.spare_nodes.extend(pool[use:])
 
         # --- fault-tolerance floor: keep >= f+1 pipelines -------------------
         if len(new_instances) < spec.f + 1:
@@ -235,6 +259,41 @@ class Reconfigurator:
             batch=batch, globally_replanned=True, spare_nodes=spares)
 
     # ------------------------------------------------------------------
+    def _decompose_prefix(self, total: int) -> Tuple[List[int], int]:
+        """Largest ``use <= total`` expressible as a sum of template
+        sizes, with its fewest-pipelines decomposition (largest-first
+        among optimal ones).  One coin-change DP covers every candidate
+        amount.  Returns ``([], 0)`` when even the smallest template
+        exceeds ``total``."""
+        sizes = sorted(self.templates, reverse=True)
+        INF = total + 1
+        minc = [0] + [INF] * total
+        for amount in range(1, total + 1):
+            for s in sizes:
+                if s <= amount and minc[amount - s] + 1 < minc[amount]:
+                    minc[amount] = minc[amount - s] + 1
+        use = total
+        while use > 0 and minc[use] >= INF:
+            use -= 1
+        out: List[int] = []
+        rem = use
+        while rem:
+            for s in sizes:
+                if s <= rem and minc[rem - s] == minc[rem] - 1:
+                    out.append(s)
+                    rem -= s
+                    break
+        return out, use
+
+    def _decompose(self, total: int) -> List[int]:
+        """Exact split of ``total`` into template sizes, fewest pipelines."""
+        parts, use = self._decompose_prefix(total)
+        if use != total:
+            raise PlanningError(
+                f"no template combination covers a merged pipeline pool of "
+                f"{total} nodes (have {sorted(self.templates)})")
+        return parts
+
     def _instantiate(self, size: int, nodes: List[str]) -> PipelineInstance:
         if size not in self.templates:
             raise PlanningError(f"no template with {size} nodes")

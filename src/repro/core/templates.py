@@ -15,7 +15,7 @@ feasibility floor.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Tuple
 
 
 class PlanningError(ValueError):
@@ -159,27 +159,36 @@ def generate_node_spec(N: int, f: int, n0: int,
     return NodeSpec(n0=n0, p=p, sizes=tuple(range(n0, n_max + 1)), f=f, N=N)
 
 
+def _max_count_table(t_max: int, sizes: Tuple[int, ...]) -> List[int]:
+    """``table[t]`` = max pipelines in any exact decomposition of ``t``
+    into template sizes, or -1 if ``t`` is not expressible.  A combination
+    with count >= c exists iff the max count is >= c, so tracking the max
+    alone suffices — O(t_max * |sizes|), which is what keeps node-spec
+    verification cheap on hundred-node clusters."""
+    table = [-1] * (t_max + 1)
+    table[0] = 0
+    for amount in range(1, t_max + 1):
+        best = -1
+        for s in sizes:
+            if s <= amount and table[amount - s] >= 0:
+                cand = table[amount - s] + 1
+                if cand > best:
+                    best = cand
+        table[amount] = best
+    return table
+
+
 def _verify_coverage(targets, sizes: Tuple[int, ...], f: int) -> bool:
     """Exhaustively verify every target is a sum of >= f+1 template sizes."""
-    for t in targets:
-        if not _coverable(t, sizes, f + 1):
-            return False
-    return True
+    targets = list(targets)
+    if not targets:
+        return True
+    table = _max_count_table(max(targets), sizes)
+    return all(table[t] >= f + 1 for t in targets)
 
 
 def _coverable(t: int, sizes: Tuple[int, ...], min_count: int) -> bool:
-    # DP over achievable (amount, count-at-least) pairs.
-    best: Dict[int, int] = {0: 0}  # amount -> max pipelines used... we need
-    # "exists combination with count >= min_count" — track max count.
-    reach: Dict[int, set] = {0: {0}}
-    for amount in range(1, t + 1):
-        counts = set()
-        for s in sizes:
-            if s <= amount and (amount - s) in reach:
-                counts.update(c + 1 for c in reach[amount - s])
-        if counts:
-            reach[amount] = counts
-    return t in reach and any(c >= min_count for c in reach[t])
+    return _max_count_table(t, sizes)[t] >= min_count
 
 
 def coverable(n_nodes: int, spec: NodeSpec) -> bool:

@@ -1,8 +1,10 @@
 from repro.sim.policies import (BambooPolicy, OobleckPolicy, Policy,
                                 PolicyStopped, VarunaPolicy)
 from repro.sim.simulator import SimResult, TraceEvent, run_sim
-from repro.sim.traces import controlled_failures, spot_trace
+from repro.sim.traces import (controlled_failures, rack_failure_bursts,
+                              scale_cycle, spot_preemption_wave, spot_trace)
 
 __all__ = ["BambooPolicy", "OobleckPolicy", "Policy", "PolicyStopped",
            "VarunaPolicy", "SimResult", "TraceEvent", "run_sim",
-           "controlled_failures", "spot_trace"]
+           "controlled_failures", "rack_failure_bursts", "scale_cycle",
+           "spot_preemption_wave", "spot_trace"]

@@ -27,6 +27,7 @@ from typing import Dict, List, Optional, Set
 
 from repro.core import cost_model as cm
 from repro.core.engine import EngineConfig, OobleckEngine
+from repro.core.monitor import NodeChangeMonitor
 from repro.core.planner import PipelinePlanner, estimate_iteration_time
 from repro.core.reconfigure import InsufficientReplicasError
 from repro.core.templates import PlanningError
@@ -46,6 +47,11 @@ class PolicyStats:
 
 class Policy:
     name: str = "base"
+    #: whether the policy can act on preemption warnings by draining the
+    #: in-flight iteration and removing the node proactively (paper §3.3:
+    #: Oobleck treats the spot grace period as a first-class event; the
+    #: checkpoint/redundancy baselines have no equivalent mechanism)
+    supports_draining: bool = False
 
     def runnable(self) -> bool:
         return True
@@ -56,6 +62,15 @@ class Policy:
     def post_iteration(self, iteration: int) -> float:
         """Extra seconds after an iteration (e.g. checkpoint save)."""
         return 0.0
+
+    def on_warning(self, nodes: List[str]) -> None:
+        """Advance notice that ``nodes`` will be preempted.  No cost."""
+
+    def on_drain(self, nodes: Set[str]) -> float:
+        """Proactive removal of warned nodes at an iteration boundary.
+        Defaults to the failure path; drain-aware policies override to
+        record that no work was lost."""
+        return self.on_failure(nodes)
 
     def commit_lag_iterations(self) -> int:
         """How many recent iterations are lost on failure (fallback)."""
@@ -74,6 +89,7 @@ class Policy:
 # ----------------------------------------------------------------------
 class OobleckPolicy(Policy):
     name = "oobleck"
+    supports_draining = True
 
     def __init__(self, profile: cm.ModelProfile, nodes: List[str],
                  f: int, global_batch: int, microbatch: int,
@@ -90,16 +106,42 @@ class OobleckPolicy(Policy):
     def iteration_time(self) -> float:
         return self.engine.iteration_time()
 
+    def on_warning(self, nodes: List[str]) -> None:
+        # drive the real engine event path: WARN sets the drain flag so a
+        # runtime would finish the in-flight iteration before vacating
+        self.engine.monitor.inject(NodeChangeMonitor.WARN, nodes)
+        self.engine.monitor.poll(now=0.0)
+
     def on_failure(self, dead: Set[str]) -> float:
+        return self._remove(dead, drained=False)
+
+    def on_drain(self, nodes: Set[str]) -> float:
+        return self._remove(nodes, drained=True)
+
+    def _remove(self, dead: Set[str], drained: bool) -> float:
+        active = set(self.engine.nodes)
+        dead = dead & (active | set(self.engine.spare_nodes))
+        if not dead:                        # e.g. drained nodes already gone
+            return 0.0
+        if not (dead & active):
+            # only idle spares died: prune them so they are never folded
+            # back into a pipeline, but no reconfiguration happens
+            self.engine.handle_failure(dead, drained=drained)
+            return 0.0
         try:
-            result = self.engine.handle_failure(dead)
+            result = self.engine.handle_failure(dead, drained=drained)
         except InsufficientReplicasError:
             raise PolicyStopped("below (f+1)*n0")
+        except PlanningError as e:          # defensive: stop, don't crash
+            raise PolicyStopped(f"oobleck: {e}")
         self.stats.reconfigurations += 1
         return self.engine.reconfiguration_seconds(result)
 
     def on_join(self, nodes: List[str]) -> float:
-        result = self.engine.handle_join(nodes)
+        try:
+            result = self.engine.handle_join(nodes)
+        except PlanningError as e:
+            raise PolicyStopped(f"oobleck: {e}")
         self.stats.reconfigurations += 1
         return self.engine.reconfiguration_seconds(result)
 

@@ -1,0 +1,371 @@
+"""Scenario-diverse failure handling at hundred-node scale (DESIGN.md §7):
+correlated rack bursts through the reconfigurator, warn-grace draining
+through the simulator, and the new trace generators."""
+import dataclasses
+
+import pytest
+
+from repro.configs import get_arch
+from repro.core import (EngineConfig, InsufficientReplicasError,
+                        OobleckEngine, build_profile,
+                        verify_replica_coverage)
+from repro.sim import (OobleckPolicy, Policy, TraceEvent, VarunaPolicy,
+                       rack_failure_bursts, run_sim, scale_cycle,
+                       spot_preemption_wave)
+
+
+def _profile(layers=66, mb=2, seq=1024):
+    arch = dataclasses.replace(get_arch("gpt2"), name=f"gpt2_L{layers}",
+                               num_layers=layers)
+    return build_profile(arch, microbatch=mb, seq_len=seq)
+
+
+def make_engine(n_nodes, f=2, n0=4, gb=4096, mb=2, layers=66):
+    prof = _profile(layers)
+    nodes = [f"node{i:03d}" for i in range(n_nodes)]
+    return OobleckEngine(prof, nodes, EngineConfig(
+        fault_tolerance=f, global_batch=gb, microbatch=mb,
+        gpus_per_node=1, n0_override=n0))
+
+
+def _check_recovered(eng, expected_nodes, f, mb, gb):
+    assert sorted(eng.nodes) == sorted(expected_nodes)
+    assert len(eng.instances) >= f + 1
+    assert verify_replica_coverage(eng.instances)
+    for inst in eng.instances:
+        assert inst.template.num_nodes == len(inst.nodes)
+    assert sum(eng.batch.num_microbatches) * mb == gb
+
+
+# ----------------------------------------------------------------------
+def test_rack_burst_recovery_at_64_nodes():
+    """A whole rack (8 nodes spanning several pipelines) dies at once."""
+    eng = make_engine(64)
+    alive = set(eng.nodes)
+    # hit nodes across different pipelines: one from each of 8 instances
+    burst = {inst.nodes[-1] for inst in eng.instances[:8]}
+    if len(burst) < 8:    # fewer than 8 pipelines: take a contiguous rack
+        burst = set(sorted(alive)[:8])
+    result = eng.handle_failure(set(burst))
+    _check_recovered(eng, alive - burst, f=2, mb=2, gb=4096)
+    assert result.reinstantiated + result.borrowed + result.merged > 0 or \
+        result.globally_replanned
+
+
+def test_repeated_bursts_until_floor_at_96_nodes():
+    """Repeated correlated bursts must keep recovering until the
+    (f+1)*n0 contract is violated, then raise InsufficientReplicas."""
+    f, n0, mb, gb = 1, 4, 2, 2048
+    eng = make_engine(96, f=f, n0=n0, gb=gb, mb=mb)
+    rack = 16
+    raised = False
+    for _ in range(12):
+        survivors = list(eng.nodes)
+        burst = set(survivors[:rack])
+        if len(survivors) - len(burst) < (f + 1) * n0:
+            with pytest.raises(InsufficientReplicasError):
+                eng.handle_failure(burst)
+            raised = True
+            break
+        eng.handle_failure(burst)
+        _check_recovered(eng, set(survivors) - burst, f=f, mb=mb, gb=gb)
+    assert raised, "never reached the fault-tolerance floor"
+
+
+def test_burst_wiping_out_whole_pipelines():
+    """Killing entire pipelines (not just members) leaves the rest able
+    to re-cover the batch."""
+    eng = make_engine(64, f=2, n0=4)
+    victims = set(eng.instances[0].nodes) | set(eng.instances[1].nodes)
+    alive = set(eng.nodes) - victims
+    eng.handle_failure(victims)
+    _check_recovered(eng, alive, f=2, mb=2, gb=4096)
+
+
+def test_warned_failure_through_engine_event_path_loses_nothing():
+    """WARN then FAIL via the monitor: the engine knows the victim was
+    drained, so the failure costs no lost iteration."""
+    from repro.core import NodeChangeMonitor
+    eng = make_engine(12, f=1, n0=4, gb=1024, layers=18)
+    warned = eng.instances[0].nodes[-1]
+    eng.monitor.inject(NodeChangeMonitor.WARN, [warned], time=1.0)
+    eng.monitor.poll(now=1.0)
+    assert eng.draining == {warned}
+    eng.monitor.inject(NodeChangeMonitor.FAIL, [warned], time=2.0)
+    eng.monitor.poll(now=2.0)
+    assert warned not in eng.nodes
+    assert eng.metrics.lost_iterations == 0
+    assert not eng.draining
+    # an UNwarned failure still loses the in-flight iteration
+    eng.handle_failure({eng.instances[0].nodes[-1]})
+    assert eng.metrics.lost_iterations == 1
+
+
+def test_short_grace_still_counts_lost_iteration():
+    """If the fail lands before the drain could complete, the engine must
+    NOT pretend the warned iteration was saved (the simulator passes the
+    ground truth; only the monitor path infers from the warning)."""
+    prof = _profile(18, mb=2, seq=256)
+    nodes = [f"n{i}" for i in range(12)]
+    pol = OobleckPolicy(prof, nodes, f=1, global_batch=256, microbatch=2,
+                        n0=4)
+    it = pol.iteration_time()
+    events = [TraceEvent(0.1 * it, "warn", ("n11",)),
+              TraceEvent(0.2 * it, "fail", ("n11",))]   # grace << iteration
+    res = run_sim(pol, events, horizon=100 * it, global_batch=256)
+    assert res.drained_nodes == 0
+    assert res.breakdown["fallback"] > 0.0
+    assert pol.engine.metrics.lost_iterations == 1
+
+
+def test_engine_spare_nodes_rejoin_on_next_reconfiguration():
+    eng = make_engine(24, f=1, n0=4, gb=1024)
+    eng.spare_nodes = ["spare0", "spare1", "spare2", "spare3"]
+    victim = eng.instances[0].nodes[-1]
+    eng.handle_failure({victim})
+    assert set(eng.spare_nodes) == set()
+    assert {"spare0", "spare1", "spare2", "spare3"} <= set(eng.nodes)
+    assert victim not in eng.nodes
+    _check_recovered(eng, [n for n in [f"node{i:03d}" for i in range(24)]
+                           if n != victim] + ["spare0", "spare1", "spare2",
+                                             "spare3"],
+                     f=1, mb=2, gb=1024)
+
+
+def test_spare_node_death_is_pruned_not_resurrected():
+    """A preempted hot spare must leave the spare pool for good: it costs
+    no reconfiguration, and a later failure must not fold the dead node
+    back into a pipeline."""
+    prof = _profile(18, mb=2, seq=256)
+    nodes = [f"n{i}" for i in range(12)]
+    pol = OobleckPolicy(prof, nodes, f=1, global_batch=256, microbatch=2,
+                        n0=4)
+    pol.engine.spare_nodes = ["spareA", "spareB"]
+    before = pol.stats.reconfigurations
+    assert pol.on_failure({"spareA"}) == 0.0
+    assert pol.stats.reconfigurations == before       # no reconfig charged
+    assert pol.engine.spare_nodes == ["spareB"]
+    pol.on_failure({nodes[-1]})                       # real failure
+    assert "spareA" not in pol.engine.nodes
+    assert "spareB" in pol.engine.nodes               # live spare rejoined
+
+
+def test_merged_pool_in_capped_gap_keeps_spares():
+    """A handcrafted capped template set {5, 6} has no decomposition for
+    a pool of 8: the reconfigurator must run the largest coverable
+    prefix and park the remainder as spares, not crash."""
+    from repro.core import NodeSpec, PipelinePlanner
+    from repro.core.reconfigure import PipelineInstance, Reconfigurator
+    prof = _profile(10)
+    templates = PipelinePlanner(prof, gpus_per_node=1).plan_all((5, 6))
+    spec = NodeSpec(n0=5, p=2, sizes=(5, 6), f=0, N=16)
+    rec = Reconfigurator(templates, spec, prof, global_batch=256,
+                         microbatch=2)
+    names = [f"m{i:02d}" for i in range(16)]
+    insts = [PipelineInstance(1, templates[5], names[:5]),
+             PipelineInstance(2, templates[6], names[5:11]),
+             PipelineInstance(3, templates[5], names[11:])]
+    # head of A, head of B, tail of C die: survivors pool to 2 + 2 + 4 = 8
+    dead = set(names[:3]) | set(names[5:9]) | {names[15]}
+    result = rec.on_failure(insts, dead)
+    assert len(result.instances) == 1
+    assert result.instances[0].template.num_nodes == 6
+    assert len(result.spare_nodes) == 2
+    covered = {n for i in result.instances for n in i.nodes}
+    assert covered | set(result.spare_nodes) == set(names) - dead
+
+
+def test_merge_pool_larger_than_biggest_template_decomposes():
+    """A burst can merge survivors into a pool with no exact template;
+    the reconfigurator must split it into covered sizes (beyond Thm B.1's
+    two-pipeline case)."""
+    from repro.core.reconfigure import Reconfigurator
+    eng = make_engine(24, f=1, n0=4)
+    parts = eng.reconf._decompose(sum(eng.spec.sizes[:2]) + 1)
+    assert sum(parts) == sum(eng.spec.sizes[:2]) + 1
+    assert all(p in eng.templates for p in parts)
+    with pytest.raises(Exception):
+        eng.reconf._decompose(1)          # below n0: impossible
+
+
+# ----------------------------------------------------------------------
+# trace generators
+# ----------------------------------------------------------------------
+NODES = [f"n{i:03d}" for i in range(64)]
+
+
+def test_rack_bursts_deterministic_and_correlated():
+    a = rack_failure_bursts(NODES, rack_size=8, horizon=3600.0,
+                            mean_interval=300.0, seed=42)
+    b = rack_failure_bursts(NODES, rack_size=8, horizon=3600.0,
+                            mean_interval=300.0, seed=42)
+    assert a == b
+    fails = [e for e in a if e.kind == "fail"]
+    assert fails, "no bursts generated"
+    assert any(len(e.nodes) > 1 for e in fails), "bursts must be correlated"
+    # each burst stays within one rack
+    racks = {n: i // 8 for i, n in enumerate(NODES)}
+    for e in fails:
+        assert len({racks[n] for n in e.nodes}) == 1
+
+
+def test_rack_bursts_respect_min_alive():
+    events = rack_failure_bursts(NODES, rack_size=8, horizon=10 ** 5,
+                                 mean_interval=60.0, seed=0, min_alive=16)
+    alive = set(NODES)
+    for e in sorted(events, key=lambda x: x.time):
+        if e.kind == "fail":
+            alive -= set(e.nodes)
+            assert len(alive) >= 16
+        else:
+            alive |= set(e.nodes)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 7])
+def test_traces_never_fail_dead_nodes(seed):
+    """Stochastic generators must not warn/fail nodes that are currently
+    down (a rack cannot die while its repair is pending)."""
+    streams = [
+        rack_failure_bursts(NODES, rack_size=4, horizon=10 ** 5,
+                            mean_interval=500.0, seed=seed,
+                            repair_time=2000.0),
+        spot_preemption_wave(NODES, horizon=10 ** 5, mean_wave=600.0,
+                             wave_frac=0.3, grace=120.0, seed=seed,
+                             mean_recover=1500.0),
+        # grace longer than the period: warns must not reach back past
+        # the victim's own rejoin
+        scale_cycle(NODES, horizon=5000.0, period=50.0, step=4, lo=48,
+                    grace=70.0),
+    ]
+    for events in streams:
+        down = set()
+        for e in sorted(events, key=lambda x: x.time):
+            if e.kind in ("warn", "fail"):
+                assert not (set(e.nodes) & down), \
+                    f"{e.kind} at t={e.time:.0f} hits dead nodes"
+            if e.kind == "fail":
+                down |= set(e.nodes)
+            elif e.kind == "join":
+                down -= set(e.nodes)
+
+
+def test_preemption_wave_warns_before_failing():
+    events = spot_preemption_wave(NODES, horizon=7200.0, mean_wave=600.0,
+                                  wave_frac=0.2, grace=120.0, seed=3)
+    warns = [(e.time, e.nodes) for e in events if e.kind == "warn"]
+    fails = [e for e in events if e.kind == "fail"]
+    assert fails
+    for f in fails:
+        assert any(n == f.nodes and abs(f.time - t - 120.0) < 1e-9
+                   for t, n in warns)
+
+
+def test_scale_cycle_bounds_and_termination():
+    events = scale_cycle(NODES, horizon=10_000.0, period=100.0, step=4,
+                         lo=32, grace=10.0)
+    alive = set(NODES)
+    for e in sorted(events, key=lambda x: x.time):
+        if e.kind == "fail":
+            alive -= set(e.nodes)
+        elif e.kind == "join":
+            alive |= set(e.nodes)
+        assert 32 <= len(alive) <= 64
+    warns = [e for e in events if e.kind == "warn"]
+    assert warns, "grace>0 must announce removals"
+    # degenerate cycle terminates
+    assert scale_cycle(NODES, horizon=10_000.0, period=100.0, step=4,
+                       lo=64, hi=64) == []
+
+
+# ----------------------------------------------------------------------
+# warn-grace draining in the simulator
+# ----------------------------------------------------------------------
+class _StubPolicy(Policy):
+    name = "stub"
+
+    def __init__(self, n, it=10.0, down=5.0, drain=False):
+        self.supports_draining = drain
+        self._n = n
+        self._it = it
+        self._down = down
+        self.warned = []
+
+    def iteration_time(self):
+        return self._it
+
+    def on_warning(self, nodes):
+        self.warned.extend(nodes)
+
+    def on_failure(self, dead):
+        self._n -= len(dead)
+        return self._down
+
+    def on_join(self, nodes):
+        self._n += len(nodes)
+        return self._down
+
+    def num_nodes(self):
+        return self._n
+
+
+def test_drain_capable_policy_loses_no_work():
+    """warn at t=12, fail at t=152 (grace >> iteration): the draining
+    policy removes the node at an iteration boundary — zero fallback."""
+    events = [TraceEvent(12.0, "warn", ("a",)),
+              TraceEvent(152.0, "fail", ("a",))]
+    pol = _StubPolicy(8, drain=True)
+    res = run_sim(pol, events, horizon=300.0, global_batch=64)
+    assert res.drained_nodes == 1
+    assert res.breakdown["fallback"] == 0.0
+    assert res.breakdown["downtime"] == 5.0
+    assert pol.num_nodes() == 7
+    assert pol.warned == ["a"]
+
+
+def test_non_draining_policy_pays_fallback():
+    events = [TraceEvent(12.0, "warn", ("a",)),
+              TraceEvent(152.0, "fail", ("a",))]
+    pol = _StubPolicy(8, drain=False)
+    res = run_sim(pol, events, horizon=300.0, global_batch=64)
+    assert res.drained_nodes == 0
+    assert res.breakdown["fallback"] > 0.0
+    assert pol.num_nodes() == 7
+
+
+def test_too_short_grace_degrades_to_interruption():
+    """fail lands mid-iteration before any boundary: drain cannot help."""
+    events = [TraceEvent(12.0, "warn", ("a",)),
+              TraceEvent(14.0, "fail", ("a",))]
+    pol = _StubPolicy(8, it=10.0, drain=True)
+    res = run_sim(pol, events, horizon=300.0, global_batch=64)
+    assert res.drained_nodes == 0
+    assert res.breakdown["fallback"] > 0.0
+
+
+def test_oobleck_policy_drains_through_engine_event_path():
+    prof = _profile(18, mb=2, seq=256)
+    nodes = [f"n{i}" for i in range(12)]
+    pol = OobleckPolicy(prof, nodes, f=1, global_batch=256, microbatch=2,
+                        n0=4)
+    events = spot_preemption_wave(nodes, horizon=50_000.0, mean_wave=8000.0,
+                                  wave_frac=0.15, grace=3600.0, seed=5,
+                                  min_alive=8)
+    assert any(e.kind == "warn" for e in events)
+    res = run_sim(pol, events, horizon=50_000.0, global_batch=256)
+    assert res.stopped_reason is None
+    assert res.drained_nodes > 0
+    assert res.breakdown["fallback"] == 0.0     # every wave was drained
+    assert pol.stats.reconfigurations >= 1
+    assert not pol.engine.draining              # cleared after reconfig
+    assert pol.engine.metrics.lost_iterations == 0  # drains lose no work
+
+
+def test_varuna_ignores_warnings():
+    prof = _profile(18, mb=2, seq=256)
+    nodes = [f"n{i}" for i in range(12)]
+    pol = VarunaPolicy(prof, nodes, global_batch=256, microbatch=2, n0=4)
+    events = [TraceEvent(100.0, "warn", ("n11",)),
+              TraceEvent(100_000.0, "fail", ("n11",))]
+    res = run_sim(pol, events, horizon=150_000.0, global_batch=256)
+    assert res.drained_nodes == 0
+    assert pol.stats.restarts == 1

@@ -49,12 +49,20 @@ def test_multi_gpu_stage_never_straddles_nodes(gpt27_profile):
 
 
 def test_memoization_shared_across_templates(gpt27_profile):
-    pl = PipelinePlanner(gpt27_profile, gpus_per_node=1)
+    pl = PipelinePlanner(gpt27_profile, gpus_per_node=1, mode="peel")
     pl.plan(6)
     hits_before = len(pl._memo)
     pl.plan(5)   # should reuse sub-states
     # planning the smaller template grows the memo only modestly
     assert len(pl._memo) < hits_before * 2
+
+
+def test_fast_rows_shared_across_templates(gpt27_profile):
+    pl = PipelinePlanner(gpt27_profile, gpus_per_node=1, mode="fast")
+    pl.plan(6)
+    rows_before = len(pl._rows)
+    pl.plan(5)   # M=1 rows are keyed (S', S') — fully shared
+    assert len(pl._rows) < rows_before * 2
 
 
 def test_iteration_time_monotone_in_microbatches(gpt27_profile):

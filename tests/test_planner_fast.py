@@ -1,0 +1,129 @@
+"""Parity + scale guarantees of the optimized planner DP (DESIGN.md §3.2).
+
+The vectorized ``fast`` mode and the dominance-pruned ``peel`` mode must
+return EXACTLY the reference ``binary`` recursion's result — identical
+``iteration_time`` floats and identical stage sequences — because the
+engine treats templates as interchangeable across planner modes.
+"""
+import dataclasses
+import random
+import time
+
+import pytest
+
+from repro.configs import get_arch
+from repro.core import PipelinePlanner, build_profile, generate_node_spec
+from repro.core.templates import PlanningError
+
+
+def _profile(layers, mb=1, seq=128):
+    arch = dataclasses.replace(get_arch("gpt2"), name=f"gpt2_L{layers}",
+                               num_layers=layers)
+    return build_profile(arch, microbatch=mb, seq_len=seq)
+
+
+def _hetero_profile(layers, seed=0):
+    """Per-layer perturbed costs: breaks the uniform-block ties that hide
+    tie-breaking divergence between DP implementations."""
+    prof = _profile(layers)
+    rng = random.Random(seed)
+    perturbed = tuple(
+        dataclasses.replace(l,
+                            flops_fwd=l.flops_fwd * (0.5 + rng.random()),
+                            io_bytes_fwd=l.io_bytes_fwd * (0.5 + rng.random()))
+        for l in prof.layers)
+    return dataclasses.replace(prof, layers=perturbed)
+
+
+def _signature(tpl):
+    return (tpl.iteration_time,
+            [(s.layer_start, s.layer_end, s.num_gpus, s.gpu_offset)
+             for s in tpl.stages])
+
+
+def _plan(profile, mode, n, gpus=1, max_stages=None):
+    return PipelinePlanner(profile, gpus_per_node=gpus, mode=mode,
+                           max_stages=max_stages).plan(n)
+
+
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("gpus", [1, 2])
+@pytest.mark.parametrize("n", [1, 2, 3])
+@pytest.mark.parametrize("layers", [3, 5])
+def test_fast_and_peel_match_binary_exactly(layers, n, gpus):
+    prof = _profile(layers)
+    if prof.num_layers < n:
+        pytest.skip("fewer layers than nodes")
+    ref = _plan(prof, "binary", n, gpus)
+    assert _signature(_plan(prof, "peel", n, gpus)) == _signature(ref)
+    assert _signature(_plan(prof, "fast", n, gpus)) == _signature(ref)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("gpus,n", [(1, 3), (1, 5), (2, 3), (4, 2), (4, 4)])
+def test_fast_matches_peel_heterogeneous(seed, gpus, n):
+    """Property over perturbed per-layer costs: bit-identical results."""
+    prof = _hetero_profile(10, seed=seed)
+    assert (_signature(_plan(prof, "fast", n, gpus))
+            == _signature(_plan(prof, "peel", n, gpus)))
+
+
+def test_fast_matches_peel_with_max_stages():
+    prof = _hetero_profile(12, seed=7)
+    for n in (2, 3):
+        assert (_signature(_plan(prof, "fast", n, 4, max_stages=2 * n))
+                == _signature(_plan(prof, "peel", n, 4, max_stages=2 * n)))
+
+
+def test_fast_matches_peel_property_random():
+    """Randomized property sweep (hypothesis-style, but dependency-free
+    so it always runs): random shapes, seeds, and GPU widths."""
+    rng = random.Random(1234)
+    for _ in range(15):
+        layers = rng.randint(3, 12)
+        gpus = rng.choice([1, 2, 3, 4])
+        prof = _hetero_profile(layers, seed=rng.randint(0, 10 ** 6))
+        n = rng.randint(1, min(4, prof.num_layers))
+        try:
+            ref = _plan(prof, "peel", n, gpus)
+        except PlanningError:
+            with pytest.raises(PlanningError):
+                _plan(prof, "fast", n, gpus)
+            continue
+        assert _signature(_plan(prof, "fast", n, gpus)) == _signature(ref)
+
+
+def test_infeasible_raises_same_error():
+    prof = _profile(3)   # 5 layers total
+    with pytest.raises(PlanningError):
+        _plan(prof, "fast", 6)
+    with pytest.raises(PlanningError):
+        _plan(prof, "peel", 6)
+
+
+# ----------------------------------------------------------------------
+def test_128_node_template_set_under_30s():
+    """Acceptance bar: the FULL template set for a 128-node cluster plans
+    in seconds (benchmarks/planning_scale.py tracks the trend)."""
+    prof = _profile(130, mb=2, seq=1024)
+    spec = generate_node_spec(N=128, f=1, n0=4, max_size=prof.num_layers)
+    planner = PipelinePlanner(prof, gpus_per_node=1, mode="fast")
+    t0 = time.perf_counter()
+    templates = planner.plan_all(spec.sizes)
+    elapsed = time.perf_counter() - t0
+    assert elapsed < 30.0, f"plan_all took {elapsed:.1f}s"
+    assert set(templates) == set(spec.sizes)
+    for n, tpl in templates.items():
+        tpl.validate(prof.num_layers)
+        assert tpl.num_nodes == n
+
+
+def test_fast_multigpu_beats_scalar_state_count():
+    """The vectorized rows visit far fewer Python-level states than the
+    scalar memo for the same multi-GPU instance."""
+    prof = _profile(24, mb=2, seq=512)
+    fast = PipelinePlanner(prof, gpus_per_node=4, mode="fast")
+    fast.plan(6)
+    peel = PipelinePlanner(prof, gpus_per_node=4, mode="peel")
+    peel.plan(6)
+    assert len(fast._rows) < len(peel._memo)

@@ -1,5 +1,6 @@
 """Dynamic reconfiguration (§5) + engine lifecycle (§3.4) + guarantees (§3.2)."""
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_arch

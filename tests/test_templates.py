@@ -1,5 +1,6 @@
 """Node-spec generation + Frobenius coverage guarantee (paper §4.1.1, App. A)."""
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import PlanningError, coverable, generate_node_spec
