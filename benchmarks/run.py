@@ -8,6 +8,8 @@ Emits ``name,us_per_call,derived`` CSV rows:
   fig11_breakdown    — Figure 11 (time-occupation breakdown)
   roofline_report    — §Roofline terms from the dry-run artifact
   planning_scale     — beyond-paper: planner/reconfig latency vs cluster size
+  step_time          — compiled per-template programs vs eager reference
+                       (steady-state + reconfiguration-to-first-step)
 """
 from __future__ import annotations
 
@@ -19,7 +21,7 @@ from benchmarks.common import Csv
 
 def main() -> None:
     from benchmarks import (fig10_spot_traces, fig11_breakdown,
-                            planning_scale, roofline_report,
+                            planning_scale, roofline_report, step_time,
                             table2_throughput, table3_planning,
                             table4_ckpt_ablation)
     only = sys.argv[1] if len(sys.argv) > 1 else None
@@ -31,6 +33,7 @@ def main() -> None:
         "fig11": fig11_breakdown.main,
         "roofline": roofline_report.main,
         "planning_scale": planning_scale.main,
+        "step_time": step_time.main,
     }
     if only is not None and only not in suites:
         print(f"unknown suite {only!r}; choose from: {', '.join(suites)}",

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.ckpt import CheckpointManager, TrainState
+from repro.ckpt import CheckpointManager
 from repro.configs import get_arch, reduced
 from repro.core import (EngineConfig, InsufficientReplicasError,
                         OobleckEngine, build_profile)
@@ -51,9 +51,9 @@ def main():
         trainer.handle_failure({nodes[1]})
     except InsufficientReplicasError as e:
         print(f"[run1] below floor: {e}")
-        full = trainer.full_params()
-        opt = adamw.init(full)
-        mgr.save(TrainState(2, full, opt, disp.state(), 0))
+        # Executor.snapshot() reassembles params AND real Adam moments
+        # from replica-0 layer states (runtime/executor.py contract)
+        mgr.save(trainer.snapshot(disp.state(), 0))
         print(f"[run1] checkpointed step 2 to {ckpt_dir}")
 
     # --- later: nodes are back; restore and continue --------------------

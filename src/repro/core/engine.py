@@ -11,8 +11,15 @@ Ties the planning artifacts together:
   exit:       InsufficientReplicas -> checkpoint + raise (user restarts
               later from the stored progress)
 
-The engine is runtime-agnostic: the discrete-event simulator (sim/) and
-the real JAX runtime (runtime/) both drive it; they only differ in what
+The engine is runtime-agnostic through ONE concrete seam: every runtime
+implements the Executor interface (runtime/executor.py — bind / step /
+recover / join / snapshot) and registers itself with
+``attach_executor``.  Cluster events from the monitor are then routed to
+the executor, which replans through the engine and swaps its compiled
+programs by cache lookup.  The heterogeneous JAX trainer
+(runtime/pipeline.py), the homogeneous SPMD fast path
+(runtime/spmd.py) and the discrete-event simulator's Oobleck policy
+(sim/policies.py) all plug in this way; they only differ in what
 "executing an iteration" means.
 """
 from __future__ import annotations
@@ -67,6 +74,10 @@ class OobleckEngine:
         self.monitor.subscribe(self._on_event)
         self.on_checkpoint = on_checkpoint
         self.metrics = EngineMetrics()
+        # the runtime bound to this engine (Executor interface); cluster
+        # events are routed through it so state rebuild and program
+        # swaps happen together with replanning
+        self.executor = None
         # nodes with a pending preemption warning: the runtime finishes
         # the in-flight iteration before they leave, so their eventual
         # failure loses no work (truthy iff a drain is pending)
@@ -106,6 +117,14 @@ class OobleckEngine:
         self.last_reconfig: Optional[ReconfigResult] = None
 
     # ------------------------------------------------------------------
+    def attach_executor(self, executor):
+        """Bind a runtime (Executor) to this engine.  Once attached,
+        monitor-driven failure/join events go through the executor so
+        array state and compiled programs stay consistent with the
+        plan; detach by attaching None."""
+        self.executor = executor
+        return executor
+
     @property
     def nodes(self) -> List[str]:
         return [n for inst in self.instances for n in inst.nodes]
@@ -151,14 +170,32 @@ class OobleckEngine:
         if ev.kind == NodeChangeMonitor.WARN:
             self.draining |= set(ev.nodes)
             return
+        # local import: core must not import runtime at module load
+        # (runtime.pipeline imports this module)
+        from repro.runtime.executor import ExecutorUnsupported
         if ev.kind == NodeChangeMonitor.FAIL:
             # the monitor path cannot say whether the drain finished, so
             # assume it did iff every victim had a pending warning; the
             # simulator/runtime call handle_failure directly with the
             # ground truth instead
-            self.handle_failure(set(ev.nodes),
-                                drained=set(ev.nodes) <= self.draining)
+            drained = set(ev.nodes) <= self.draining
+            if self.executor is not None:
+                try:
+                    self.executor.recover(set(ev.nodes), drained=drained)
+                    return
+                except ExecutorUnsupported:
+                    # e.g. the SPMD fast path: keep the PLAN consistent
+                    # here; the caller rebinds a HeteroTrainer from
+                    # snapshot() against the updated plan
+                    pass
+            self.handle_failure(set(ev.nodes), drained=drained)
         elif ev.kind == NodeChangeMonitor.JOIN:
+            if self.executor is not None:
+                try:
+                    self.executor.join(list(ev.nodes))
+                    return
+                except ExecutorUnsupported:
+                    pass
             self.handle_join(list(ev.nodes))
 
     def handle_failure(self, dead: Set[str],

@@ -41,7 +41,8 @@ import jax
 from repro.configs import SHAPES, all_archs, cells_for, get_arch
 from repro.launch import specs as sp
 from repro.launch.hloparse import analyze
-from repro.launch.mesh import data_axes, make_production_mesh, mesh_chips
+from repro.launch.mesh import (cost_analysis_dict, data_axes,
+                               make_production_mesh, mesh_chips)
 from repro.optim import adamw
 from repro.runtime.sharding import ShardingStrategy
 from repro.runtime import spmd
@@ -102,7 +103,7 @@ def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     ma = compiled.memory_analysis()
     text = compiled.as_text()
     stats = analyze(text, default_group=mesh.shape[strategy.model_axis])

@@ -2,8 +2,12 @@
 
 Runs REAL training (forward/backward/optimizer on actual arrays) through
 the Oobleck stack: planner -> templates -> heterogeneous pipeline
-instances -> 1F1B execution -> layer-granular sync -> AdamW, with
-failure injection, recovery-from-replicas, checkpointing, and restart.
+instances -> compiled per-template step programs -> layer-granular sync
+-> AdamW, with failure injection, recovery-from-replicas,
+checkpointing, and restart.  The runtime sits behind the Executor
+interface (runtime/executor.py): training steps are cached-program
+calls, reconfiguration swaps programs by cache lookup, and checkpoint
+hooks go through ``Executor.snapshot()``.
 
 Container-friendly: uses a reduced config by default (--full to use the
 exact assigned config — sized for the production mesh, not a CPU).
@@ -20,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.ckpt import CheckpointManager, TrainState
+from repro.ckpt import CheckpointManager
 from repro.configs import get_arch, reduced
 from repro.core import EngineConfig, OobleckEngine, build_profile
 from repro.data import ByteCorpus, GlobalBatchDispenser, SyntheticLM
@@ -57,6 +61,11 @@ def main(argv=None) -> dict:
     ap.add_argument("--join-at", type=int, default=-1)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--eager", action="store_true",
+                    help="use the eager reference path instead of the "
+                         "compiled per-template program cache")
+    ap.add_argument("--no-warm", action="store_true",
+                    help="skip bootstrap warming of the full template set")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -79,42 +88,53 @@ def main(argv=None) -> dict:
           f"microbatches={engine.batch.num_microbatches}")
 
     opt_cfg = adamw.AdamWConfig(lr=3e-3, warmup_steps=0, weight_decay=0.0)
-    trainer = HeteroTrainer(model, engine, params, opt_cfg)
+    trainer = HeteroTrainer(model, engine, params, opt_cfg,
+                            mode="eager" if args.eager else "compiled")
+    if not args.eager and not args.no_warm:
+        t0 = time.perf_counter()
+        stats = trainer.warm_templates()
+        print(f"[warm] {stats['compiles']} programs compiled for "
+              f"{len(engine.templates)} templates in "
+              f"{time.perf_counter() - t0:.1f}s — any reconfiguration now "
+              f"swaps programs by lookup")
     source = ByteCorpus(_TEXT * 50, seq_len=args.seq_len)
     disp = GlobalBatchDispenser(source)
     mgr = None
     if args.ckpt_dir:
         mgr = CheckpointManager(args.ckpt_dir, num_layers=arch.num_layers)
+        # the engine checkpoints through the executor snapshot on an
+        # unrecoverable shrink (< (f+1)*n0 nodes), §3.4
+        engine.on_checkpoint = lambda: mgr.save(
+            trainer.snapshot(disp.state(), args.seed), block=True)
 
     losses = []
-    joined = 0
     for step in range(args.steps):
         if step == args.kill_at:
             victim = engine.instances[0].nodes[-1]
             t0 = time.perf_counter()
-            info = trainer.handle_failure({victim})
+            info = trainer.recover({victim})
             print(f"[fail] killed {victim}: recovered from replicas in "
                   f"{time.perf_counter() - t0:.2f}s "
-                  f"(copied {info['copied_bytes'] / 1e6:.0f}MB of state), "
+                  f"(copied {info['copied_bytes'] / 1e6:.0f}MB of state, "
+                  f"program cache: {info['cache']}), "
                   f"pipelines={[i.template.num_nodes for i in engine.instances]}")
         if step == args.join_at:
             raise SystemExit("join-at requires the elastic example; see "
                              "examples/spot_trace_replay.py")
         batches = disp.next_step(engine.batch.minibatch_sizes())
-        out = trainer.train_step(
+        out = trainer.step(
             [microbatches(b, args.microbatch) for b in batches])
-        losses.append(out["loss"])
-        print(f"[step {step}] loss={out['loss']:.4f} "
+        losses.append(float(out["loss"]))        # host sync at step edge
+        print(f"[step {step}] loss={losses[-1]:.4f} "
               f"pipelines={out['num_pipelines']} "
               f"divergence={trainer.replica_divergence():.2e}")
         if mgr and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
-            full = trainer.full_params()
-            mgr.save(TrainState(step + 1, full, adamw.init(full),
-                                disp.state(), args.seed))
+            mgr.save(trainer.snapshot(disp.state(), args.seed))
     if mgr:
         mgr.wait()
     assert losses[-1] < losses[0], "training must reduce the loss"
-    print(f"[done] loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    print(f"[done] loss {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"(cache: {trainer.cache.stats.as_dict()})")
     return {"losses": losses}
 
 

@@ -1,8 +1,15 @@
+from repro.runtime.executor import (Executor, ExecutorUnsupported,
+                                    ProgramCache, template_signature,
+                                    track_compiles, track_host_transfers)
 from repro.runtime.pipeline import HeteroTrainer, split_into_layers
 from repro.runtime.schedule import (flat_schedule, one_f_one_b,
                                     simulate_makespan)
 from repro.runtime.sharding import ShardingStrategy
 from repro.runtime import spmd
+from repro.runtime.spmd import SPMDExecutor
 
-__all__ = ["HeteroTrainer", "split_into_layers", "flat_schedule",
-           "one_f_one_b", "simulate_makespan", "ShardingStrategy", "spmd"]
+__all__ = ["Executor", "ExecutorUnsupported", "ProgramCache",
+           "template_signature", "track_compiles", "track_host_transfers",
+           "HeteroTrainer", "split_into_layers", "flat_schedule",
+           "one_f_one_b", "simulate_makespan", "ShardingStrategy", "spmd",
+           "SPMDExecutor"]

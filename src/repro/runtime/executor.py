@@ -1,0 +1,232 @@
+"""Executor interface + template-keyed compiled program cache (DESIGN.md §8).
+
+Oobleck's planning is a table lookup at failure time (templates are
+precomputed, §4); this module gives EXECUTION the same property.  Every
+runtime — the heterogeneous single-controller trainer
+(runtime/pipeline.py), the homogeneous SPMD fast path (runtime/spmd.py)
+and the discrete-event simulator's policy (sim/policies.py) — sits
+behind one ``Executor`` interface:
+
+    bind()      (re)associate state with the current pipeline set and
+                make sure every program it needs is compiled
+    step()      one training iteration; metrics come back as device
+                arrays (NO host sync inside the schedule)
+    recover()   node failure: re-plan via the engine, rebuild bindings
+                from surviving replicas, swap programs by cache lookup
+    join()      elastic scale-up, same contract as recover()
+    snapshot()  a host-side TrainState for checkpointing
+
+``ProgramCache`` holds ahead-of-time compiled executables keyed by
+(kind, template-signature, microbatch-count, shapes).  Reconfiguration
+then never compiles: the new pipeline set's programs are already in the
+cache (warmed at bootstrap for the whole template set), mirroring how
+the planner precomputes every template it could ever instantiate.
+ReCycle (arXiv:2405.14009) and Bamboo (arXiv:2204.12013) both observe
+that post-failure adaptation speed hinges on exactly this reuse.
+
+The cache counts compiles and hits so tests and benchmarks can assert
+the zero-recompilation property instead of trusting it
+(``track_compiles`` additionally counts XLA backend compiles fired by
+anything else via jax.monitoring).
+"""
+from __future__ import annotations
+
+import abc
+import contextlib
+import dataclasses
+from typing import Any, Callable, Dict, Hashable, Iterator, List, Optional, Set, Tuple
+
+import jax
+
+
+# ----------------------------------------------------------------------
+# Shared aval helper (cache keys and AOT lowering must agree on this)
+# ----------------------------------------------------------------------
+def avals_of(tree):
+    """Pytree of arrays -> pytree of ShapeDtypeStructs (for AOT
+    lower/compile and for shape-keyed cache entries)."""
+    return jax.tree.map(
+        lambda t: jax.ShapeDtypeStruct(t.shape, t.dtype), tree)
+
+
+# ----------------------------------------------------------------------
+# Template signatures
+# ----------------------------------------------------------------------
+def template_signature(template) -> Tuple[Tuple[int, int], ...]:
+    """A PipelineTemplate's computational identity: the stage->layer
+    tiling.  Templates with the same tiling run the SAME compiled step
+    program regardless of which nodes host the stages, so the cache key
+    deliberately ignores node/GPU placement."""
+    return tuple((st.layer_start, st.layer_end) for st in template.stages)
+
+
+# ----------------------------------------------------------------------
+# Program cache
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class CacheStats:
+    compiles: int = 0
+    hits: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return {"compiles": self.compiles, "hits": self.hits}
+
+
+class ProgramCache:
+    """AOT-compiled executables keyed by (kind, signature, shapes).
+
+    ``get_or_build`` is the only entry point: a miss runs ``builder``
+    (expected to return a callable, typically ``jax.jit(f).lower(...)
+    .compile()``) and counts a compile; a hit returns the stored
+    executable untouched.  Reconfiguration correctness tests assert
+    ``stats.compiles`` stays flat across a failure->recover->step cycle.
+    """
+
+    def __init__(self) -> None:
+        self._programs: Dict[Hashable, Callable] = {}
+        self.stats = CacheStats()
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._programs
+
+    def __len__(self) -> int:
+        return len(self._programs)
+
+    def keys(self) -> List[Hashable]:
+        return list(self._programs)
+
+    def get_or_build(self, key: Hashable, builder: Callable[[], Callable]
+                     ) -> Callable:
+        prog = self._programs.get(key)
+        if prog is not None:
+            self.stats.hits += 1
+            return prog
+        prog = builder()
+        self._programs[key] = prog
+        self.stats.compiles += 1
+        return prog
+
+
+# ----------------------------------------------------------------------
+# Compilation-count instrumentation (tests + benchmarks)
+# ----------------------------------------------------------------------
+_BACKEND_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+
+@dataclasses.dataclass
+class CompileLog:
+    backend_compiles: int = 0
+    _active: bool = True
+
+
+@contextlib.contextmanager
+def track_compiles() -> Iterator[CompileLog]:
+    """Count XLA backend compiles inside the block via jax.monitoring —
+    catches retraces *anywhere*, not just ones routed through a
+    ProgramCache.  Usage::
+
+        with track_compiles() as log:
+            trainer.recover({victim}); trainer.train_step(batches)
+        assert log.backend_compiles == 0
+    """
+    log = CompileLog()
+
+    def listener(name: str, secs: float, **kw: Any) -> None:
+        if log._active and name == _BACKEND_COMPILE_EVENT:
+            log.backend_compiles += 1
+
+    jax.monitoring.register_event_duration_secs_listener(listener)
+    try:
+        yield log
+    finally:
+        log._active = False
+        try:  # best effort: private API, present in jax>=0.4.30
+            from jax._src import monitoring as _mon
+            _mon._unregister_event_duration_listener_by_callback(listener)
+        except Exception:
+            pass  # listener stays registered but inert (_active False)
+
+
+# ----------------------------------------------------------------------
+# Host-transfer instrumentation (tests)
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class TransferLog:
+    device_to_host: int = 0
+
+
+@contextlib.contextmanager
+def track_host_transfers() -> Iterator[TransferLog]:
+    """Count device->host materializations inside the block by
+    intercepting ``ArrayImpl._value``/``__array__`` — the funnel for
+    ``float(arr)``, ``np.asarray(arr)``, ``.item()`` and friends.  The
+    no-host-sync contract of Executor.step() is asserted with this
+    (``jax.transfer_guard`` does not see these conversions for
+    uncommitted arrays on the installed JAX floor)."""
+    from jax._src.array import ArrayImpl
+    log = TransferLog()
+    orig_value = ArrayImpl.__dict__["_value"]
+    orig_array = ArrayImpl.__dict__.get("__array__")
+
+    def spy_value(self):
+        log.device_to_host += 1
+        return orig_value.fget(self)
+
+    def spy_array(self, *a, **kw):
+        log.device_to_host += 1
+        return orig_array(self, *a, **kw)
+
+    ArrayImpl._value = property(spy_value)
+    if orig_array is not None:
+        ArrayImpl.__array__ = spy_array
+    try:
+        yield log
+    finally:
+        ArrayImpl._value = orig_value
+        if orig_array is not None:
+            ArrayImpl.__array__ = orig_array
+
+
+# ----------------------------------------------------------------------
+# The interface
+# ----------------------------------------------------------------------
+class ExecutorUnsupported(RuntimeError):
+    """The executor cannot express the requested transition (e.g. the
+    single-program SPMD fast path cannot reconfigure in place — the
+    caller must rebind a heterogeneous executor)."""
+
+
+class Executor(abc.ABC):
+    """Uniform runtime contract driven by core/engine.py.
+
+    Implementations: runtime.pipeline.HeteroTrainer (heterogeneous
+    template sets, compiled per-template programs),
+    runtime.spmd.SPMDExecutor (homogeneous zero-failure fast path,
+    one donated SPMD program) and sim.policies.OobleckPolicy (simulated
+    time; step() reports seconds instead of spending them).
+    """
+
+    @abc.abstractmethod
+    def bind(self) -> None:
+        """(Re)bind state to the current pipeline set and ensure every
+        program the set needs is present in the cache."""
+
+    @abc.abstractmethod
+    def step(self, batches: Any) -> Dict[str, Any]:
+        """Run one training iteration.  Loss/metrics are returned as
+        device arrays (or simulated scalars); implementations must not
+        force a host sync inside the schedule."""
+
+    @abc.abstractmethod
+    def recover(self, dead: Set[str], drained: bool = False) -> Dict[str, Any]:
+        """Handle node failures: replan, rebuild state from surviving
+        replicas, swap to the new pipeline set's cached programs."""
+
+    @abc.abstractmethod
+    def join(self, nodes: List[str]) -> Dict[str, Any]:
+        """Elastic scale-up (same copy-plan path as recover, §5)."""
+
+    @abc.abstractmethod
+    def snapshot(self, data_state: Optional[Dict] = None,
+                 rng_seed: int = 0) -> Any:
+        """Host-side TrainState for checkpointing (allowed to sync)."""

@@ -4,18 +4,31 @@ Each PipelineInstance from the core engine is bound to concrete arrays:
 every stage holds ONLY its layers' params + Adam moments (layer-indexed,
 the paper's unit of state).  A training step:
 
-  1. per pipeline: run the 1F1B schedule with per-microbatch jax.vjp
-     chains (forward activations / backward cotangents hop between
-     stages), accumulating per-layer gradients;
+  1. per pipeline: ONE compiled, cached step program — a
+     ``lax.scan`` over the microbatch axis with in-program 1F1B
+     gradient accumulation — returns per-layer gradient sums and the
+     per-microbatch NLL as an ARRAY (no host sync inside the schedule).
+     Programs live in a template-keyed ProgramCache
+     (runtime/executor.py, DESIGN.md §8): key = (template signature,
+     microbatch count, shapes), warmed at bootstrap for the whole
+     template set so reconfiguration swaps programs by lookup — the
+     execution-side mirror of the planner's precompute-everything
+     design;
   2. cross-pipeline sync at LAYER granularity (Figure 9): a weighted
      average over replicas, weights = minibatch sizes, so the result is
      exactly the global-batch mean gradient;
-  3. identical AdamW update on every replica of every layer — replicas
-     stay bit-identical, which is what makes step 4 sound;
+  3. identical AdamW update on every replica of every layer through a
+     compiled, DONATED update program — replicas stay bit-identical,
+     which is what makes step 4 sound;
   4. on failure: the core engine reinstantiates pipelines from templates
      and emits a copy plan; we rebuild stage arrays by copying layer
      states (params AND moments) from surviving replicas — recovery
-     without any checkpoint, the paper's headline mechanism.
+     without any checkpoint, the paper's headline mechanism — and the
+     new pipeline set's programs come straight from the cache.
+
+``mode="eager"`` keeps the original per-microbatch ``jax.vjp``-chain
+schedule walker as the parity reference (it shares the sync/update path
+and, per the compiled contract, never syncs the host mid-schedule).
 
 This path runs real heterogeneous sets (different stage counts per
 pipeline) — the thing single-program SPMD cannot express; the SPMD fast
@@ -24,7 +37,7 @@ path (runtime/spmd.py) covers the homogeneous zero-failure case.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +49,9 @@ from repro.core.reconfigure import PipelineInstance
 from repro.models import Model
 from repro.models.layers import cross_entropy, embed, unembed
 from repro.optim import adamw
+from repro.runtime.executor import (Executor, ProgramCache,
+                                    avals_of as _avals_of,
+                                    template_signature)
 from repro.runtime.schedule import flat_schedule
 
 LayerState = Dict[str, Any]     # {"p": params, "m": moment1, "v": moment2}
@@ -65,6 +81,13 @@ def split_into_layers(model: Model, params: Dict) -> List[Dict]:
 
 def zeros_like_tree(tree):
     return jax.tree.map(lambda t: jnp.zeros_like(t, dtype=jnp.float32), tree)
+
+
+def _tree_spec(tree) -> Tuple:
+    """Hashable (path, shape, dtype) spec of a pytree of arrays/avals."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return tuple((jax.tree_util.keystr(path), tuple(leaf.shape),
+                  str(jnp.dtype(leaf.dtype))) for path, leaf in flat)
 
 
 # ----------------------------------------------------------------------
@@ -114,36 +137,58 @@ class PipelineRun:
     def num_stages(self) -> int:
         return len(self.stage_layers)
 
+    @property
+    def signature(self) -> Tuple[Tuple[int, int], ...]:
+        return template_signature(self.instance.template)
+
     def stage_params(self, s: int) -> List[Dict]:
         return [self.states[l]["p"] for l in self.stage_layers[s]]
 
+    def all_stage_params(self) -> List[List[Dict]]:
+        return [[self.states[l]["p"] for l in lids]
+                for lids in self.stage_layers]
 
-class HeteroTrainer:
+
+class HeteroTrainer(Executor):
     """Drives N heterogeneous pipeline replicas through train steps and
-    failure recovery, using the core engine for all planning."""
+    failure recovery, using the core engine for all planning and a
+    template-keyed ProgramCache for all execution."""
 
     def __init__(self, model: Model, engine: OobleckEngine,
-                 params: Dict, opt_cfg: adamw.AdamWConfig):
+                 params: Dict, opt_cfg: adamw.AdamWConfig,
+                 mode: str = "compiled",
+                 cache: Optional[ProgramCache] = None):
+        assert mode in ("compiled", "eager"), mode
         self.model = model
         self.engine = engine
         self.opt_cfg = opt_cfg
+        self.mode = mode
+        self.cache = cache or ProgramCache()
         self.opt_step = jnp.zeros((), jnp.int32)
         layers = split_into_layers(model, params)
         self.num_layers = len(layers)
         self._kind = (["embed"] + ["block"] * model.arch.num_layers
                       + ["head"])
+        # shape/dtype skeleton of every layer: lets warm() compile
+        # programs for templates that are not currently instantiated
+        self._layer_avals = [_avals_of(l) for l in layers]
         self.runs: List[PipelineRun] = [
-            self._bind(inst, layers) for inst in engine.instances]
+            self._bind_run(inst, layers) for inst in engine.instances]
+        if hasattr(engine, "attach_executor"):
+            engine.attach_executor(self)
+        self.bind()
 
     # ------------------------------------------------------------------
-    def _bind(self, inst: PipelineInstance, layers: List[Dict],
-              source_states: Optional[Dict[int, LayerState]] = None
-              ) -> PipelineRun:
+    def _bind_run(self, inst: PipelineInstance, layers: Optional[List[Dict]],
+                  source_states: Optional[Dict[int, LayerState]] = None
+                  ) -> PipelineRun:
         stage_layers = [list(range(st.layer_start, st.layer_end))
                         for st in inst.template.stages]
         states: Dict[int, LayerState] = {}
         for lids in stage_layers:
             for l in lids:
+                # ALWAYS copy: update programs donate their input
+                # buffers, so replicas must never alias layer state
                 if source_states is not None and l in source_states:
                     src = source_states[l]
                     states[l] = {"p": jax.tree.map(jnp.copy, src["p"]),
@@ -151,18 +196,169 @@ class HeteroTrainer:
                                  "v": jax.tree.map(jnp.copy, src["v"])}
                 else:
                     p = layers[l]
-                    states[l] = {"p": jax.tree.map(jnp.asarray, p),
+                    states[l] = {"p": jax.tree.map(jnp.copy, p),
                                  "m": zeros_like_tree(p),
                                  "v": zeros_like_tree(p)}
         fns = [make_stage_fn(self.model, [self._kind[l] for l in lids])
                for lids in stage_layers]
         return PipelineRun(inst, stage_layers, states, fns)
 
+    # keep the historical name for callers/tests
+    _bind = _bind_run
+
     # ------------------------------------------------------------------
-    # One pipeline's 1F1B iteration -> per-layer grads + mean loss
+    # Program cache plumbing
     # ------------------------------------------------------------------
-    def _run_pipeline(self, run: PipelineRun, microbatches: List[Dict]
-                      ) -> Tuple[Dict[int, Any], float]:
+    def _stage_avals(self, sig: Tuple[Tuple[int, int], ...]) -> List[List]:
+        return [[self._layer_avals[l] for l in range(u, v)]
+                for (u, v) in sig]
+
+    def _batch_avals(self, M: int) -> Tuple:
+        b = self.engine.config.microbatch
+        s = self.engine.profile.seq_len
+        tok = jax.ShapeDtypeStruct((M, b, s), jnp.int32)
+        return tok, tok
+
+    def _grads_program(self, sig: Tuple[Tuple[int, int], ...],
+                       tok_aval, lab_aval, fe_aval=None) -> Callable:
+        """Compiled per-(template-signature, microbatch-count) step
+        program: scan over microbatches, in-program 1F1B gradient
+        accumulation, per-microbatch NLL returned as an array."""
+        key = ("grads", sig, _tree_spec(tok_aval), _tree_spec(lab_aval),
+               _tree_spec(fe_aval) if fe_aval is not None else None)
+
+        def build() -> Callable:
+            kinds = [[self._kind[l] for l in range(u, v)] for (u, v) in sig]
+            fns = [make_stage_fn(self.model, k) for k in kinds]
+            M = tok_aval.shape[0]
+
+            def loss_of(stage_params, tok, lab, fe):
+                carry = (tok, jnp.zeros((), jnp.float32))
+                for fn, sp in zip(fns, stage_params):
+                    carry = fn(sp, carry, lab, fe)
+                loss, nll = carry
+                return loss, nll
+
+            def grads_fn(stage_params, tokens, labels, *fe_args):
+                def body(gsum, xs):
+                    tok, lab = xs[0], xs[1]
+                    fe = xs[2] if len(xs) > 2 else None
+                    (_, nll), g = jax.value_and_grad(
+                        loss_of, has_aux=True)(stage_params, tok, lab, fe)
+                    return jax.tree.map(jnp.add, gsum, g), nll
+
+                zeros = jax.tree.map(lambda t: jnp.zeros(t.shape, t.dtype),
+                                     stage_params)
+                xs = (tokens, labels) + tuple(fe_args)
+                gsum, nlls = jax.lax.scan(body, zeros, xs)
+                gsum = jax.tree.map(lambda g: g / M, gsum)
+                return gsum, nlls
+
+            avals = (self._stage_avals(sig), tok_aval, lab_aval)
+            if fe_aval is not None:
+                avals = avals + (fe_aval,)
+            return jax.jit(grads_fn).lower(*avals).compile()
+
+        return self.cache.get_or_build(key, build)
+
+    def _update_program(self, state: LayerState, grad) -> Callable:
+        """Compiled per-layer-structure AdamW update with the state
+        buffers DONATED — the optimizer writes in place."""
+        s_aval, g_aval = _avals_of(state), _avals_of(grad)
+        key = ("update", _tree_spec(s_aval), _tree_spec(g_aval))
+
+        def build() -> Callable:
+            layer_cfg = dataclasses.replace(self.opt_cfg, clip_norm=0.0)
+
+            def upd(st, g, scale, step):
+                g = jax.tree.map(lambda t: t * scale, g)
+                new_p, new_opt, _ = adamw.apply(
+                    layer_cfg, st["p"], g,
+                    adamw.AdamWState(step, st["m"], st["v"]))
+                return {"p": new_p, "m": new_opt.m, "v": new_opt.v}
+
+            scale_aval = jax.ShapeDtypeStruct((), jnp.float32)
+            step_aval = jax.ShapeDtypeStruct((), jnp.int32)
+            return jax.jit(upd, donate_argnums=(0,)).lower(
+                s_aval, g_aval, scale_aval, step_aval).compile()
+
+        return self.cache.get_or_build(key, build)
+
+    # ------------------------------------------------------------------
+    # Warming: precompute-everything, execution edition
+    # ------------------------------------------------------------------
+    def bind(self) -> None:
+        """Ensure programs for the CURRENT pipeline set + batch plan are
+        cached (cheap after warm_templates(): pure lookups)."""
+        if self.mode != "compiled":
+            return
+        for run, M in zip(self.runs, self.engine.batch.num_microbatches):
+            tok, lab = self._batch_avals(M)
+            self._grads_program(run.signature, tok, lab)
+        # seed every distinct layer structure (embed / block / head)
+        for l, aval in enumerate(self._layer_avals):
+            state_aval = {"p": aval,
+                          "m": jax.tree.map(
+                              lambda t: jax.ShapeDtypeStruct(
+                                  t.shape, jnp.float32), aval),
+                          "v": jax.tree.map(
+                              lambda t: jax.ShapeDtypeStruct(
+                                  t.shape, jnp.float32), aval)}
+            self._update_program(state_aval, aval)
+
+    def warm_templates(self, mb_counts: Optional[Iterable[int]] = None
+                       ) -> Dict[str, int]:
+        """Precompile step programs for EVERY template in the engine's
+        set x every reachable microbatch count, so any reconfiguration
+        the reconfigurator can emit swaps programs by cache lookup with
+        ZERO compilation.  Counts default to 1..total_mb — the exact
+        reachable set, since batch distribution gives every pipeline at
+        least one of the total_mb microbatches."""
+        if self.mode != "compiled":
+            return self.cache.stats.as_dict()
+        if mb_counts is None:
+            total_mb = (self.engine.config.global_batch
+                        // self.engine.config.microbatch)
+            mb_counts = range(1, total_mb + 1)
+        for tpl in self.engine.templates.values():
+            sig = template_signature(tpl)
+            for M in mb_counts:
+                tok, lab = self._batch_avals(M)
+                self._grads_program(sig, tok, lab)
+        self.bind()
+        return self.cache.stats.as_dict()
+
+    # ------------------------------------------------------------------
+    # One pipeline's iteration -> per-layer grad means + per-mb NLL
+    # ------------------------------------------------------------------
+    def _run_compiled(self, run: PipelineRun, microbatches: List[Dict]
+                      ) -> Tuple[Dict[int, Any], jax.Array]:
+        tokens = jnp.stack([jnp.asarray(b["tokens"])
+                            for b in microbatches]).astype(jnp.int32)
+        labels = jnp.stack([jnp.asarray(b["labels"])
+                            for b in microbatches]).astype(jnp.int32)
+        fes = [b.get("frontend_embeds") for b in microbatches]
+        fe = (jnp.stack([jnp.asarray(f) for f in fes])
+              if fes[0] is not None else None)
+        prog = self._grads_program(
+            run.signature, _avals_of(tokens), _avals_of(labels),
+            _avals_of(fe) if fe is not None else None)
+        args = (run.all_stage_params(), tokens, labels)
+        if fe is not None:
+            args = args + (fe,)
+        gstages, nll = prog(*args)
+        grads: Dict[int, Any] = {}
+        for s, lids in enumerate(run.stage_layers):
+            for j, l in enumerate(lids):
+                grads[l] = gstages[s][j]
+        return grads, nll
+
+    def _run_eager(self, run: PipelineRun, microbatches: List[Dict]
+                   ) -> Tuple[Dict[int, Any], jax.Array]:
+        """Reference path: walks the explicit 1F1B schedule with
+        per-microbatch jax.vjp chains.  Kept for parity testing and as
+        the readable spec of what the compiled program fuses; it must
+        never force a host sync mid-schedule (losses stay on device)."""
         S = run.num_stages
         M = len(microbatches)
         sched = flat_schedule(S, M)
@@ -170,7 +366,7 @@ class HeteroTrainer:
         cots: Dict[Tuple[int, int], Any] = {}
         vjps: Dict[Tuple[int, int], Any] = {}
         gsum: List[Any] = [None] * S
-        losses: List[float] = []
+        losses: List[jax.Array] = []
 
         for (s, op, mb) in sched:
             batch = microbatches[mb]
@@ -189,7 +385,7 @@ class HeteroTrainer:
                 vjps[(s, mb)] = vjp
                 if s == S - 1:
                     loss, nll = out
-                    losses.append(float(nll))
+                    losses.append(nll)          # device array, no sync
                     cots[(s, mb)] = (jnp.ones(()), jnp.zeros(()))
                 else:
                     acts[(s, mb)] = out
@@ -206,18 +402,26 @@ class HeteroTrainer:
         for s, lids in enumerate(run.stage_layers):
             for j, l in enumerate(lids):
                 grads[l] = jax.tree.map(lambda g: g / M, gsum[s][j])
-        return grads, float(np.mean(losses))
+        return grads, jnp.stack(losses)
+
+    def _run_pipeline(self, run: PipelineRun, microbatches: List[Dict]
+                      ) -> Tuple[Dict[int, Any], jax.Array]:
+        if self.mode == "compiled":
+            return self._run_compiled(run, microbatches)
+        return self._run_eager(run, microbatches)
 
     # ------------------------------------------------------------------
     def train_step(self, per_pipeline_batches: List[List[Dict]]) -> Dict:
-        """per_pipeline_batches[i] = list of N_b,i microbatch dicts."""
+        """per_pipeline_batches[i] = list of N_b,i microbatch dicts.
+        Returns metrics as DEVICE ARRAYS — nothing here blocks on the
+        device; callers convert when they want to look."""
         assert len(per_pipeline_batches) == len(self.runs)
         all_grads: List[Dict[int, Any]] = []
-        losses, weights = [], []
+        nlls, weights = [], []
         for run, mbs in zip(self.runs, per_pipeline_batches):
-            g, loss = self._run_pipeline(run, mbs)
+            g, nll = self._run_pipeline(run, mbs)
             all_grads.append(g)
-            losses.append(loss)
+            nlls.append(nll)
             weights.append(len(mbs))
 
         # ---- layer-granular cross-replica sync (Figure 9) -------------
@@ -232,33 +436,41 @@ class HeteroTrainer:
             synced[l] = acc
 
         # ---- global-norm clip across the WHOLE model -------------------
-        # (clipping per layer would diverge from the SPMD fast path)
+        # (clipping per layer would diverge from the SPMD fast path);
+        # all-device arithmetic: the scale is folded into the compiled
+        # update, never forced to the host
+        sq = jnp.zeros((), jnp.float32)
+        for l in range(self.num_layers):
+            for t in jax.tree.leaves(synced[l]):
+                sq = sq + jnp.sum(jnp.square(t.astype(jnp.float32)))
+        grad_norm = jnp.sqrt(sq)
         if self.opt_cfg.clip_norm:
-            sq = sum(float(jnp.sum(jnp.square(t.astype(jnp.float32))))
-                     for l in range(self.num_layers)
-                     for t in jax.tree.leaves(synced[l]))
-            norm = float(np.sqrt(sq))
-            scale = min(1.0, self.opt_cfg.clip_norm / max(norm, 1e-12))
-            if scale < 1.0:
-                synced = {l: jax.tree.map(lambda g: g * scale, g_)
-                          for l, g_ in synced.items()}
-        layer_cfg = dataclasses.replace(self.opt_cfg, clip_norm=0.0)
+            scale = jnp.minimum(
+                1.0, self.opt_cfg.clip_norm / jnp.maximum(grad_norm, 1e-12))
+        else:
+            scale = jnp.ones(())
+        scale = scale.astype(jnp.float32)
 
         # ---- identical AdamW update on every replica -------------------
+        step_in = self.opt_step                 # adamw.apply increments
         self.opt_step = self.opt_step + 1
         for run in self.runs:
-            for l, st in run.states.items():
-                new_p, new_opt, _ = adamw.apply(
-                    layer_cfg, st["p"], synced[l],
-                    adamw.AdamWState(self.opt_step - 1, st["m"], st["v"]))
-                st["p"], st["m"], st["v"] = new_p, new_opt.m, new_opt.v
-        loss = float(np.average(losses, weights=weights))
-        return {"loss": loss, "num_pipelines": len(self.runs)}
+            for l in sorted(run.states):
+                st = run.states[l]
+                prog = self._update_program(st, synced[l])
+                run.states[l] = prog(st, synced[l], scale, step_in)
+        loss = sum(jnp.sum(n) for n in nlls) / float(sum(weights))
+        return {"loss": loss, "grad_norm": grad_norm,
+                "num_pipelines": len(self.runs)}
+
+    # Executor interface --------------------------------------------------
+    def step(self, batches: List[List[Dict]]) -> Dict:
+        return self.train_step(batches)
 
     # ------------------------------------------------------------------
     # Failure recovery: copy layer states from surviving replicas
     # ------------------------------------------------------------------
-    def handle_failure(self, dead_nodes: set) -> Dict:
+    def handle_failure(self, dead_nodes: set, drained: bool = False) -> Dict:
         # Surviving replicas' states, BEFORE reconfiguration: a node's
         # layer states survive iff the node survives.
         survivors: Dict[int, LayerState] = {}
@@ -270,13 +482,16 @@ class HeteroTrainer:
                     continue
                 for l in lids:
                     survivors.setdefault(l, run.states[l])
-        result = self.engine.handle_failure(dead_nodes)
+        result = self.engine.handle_failure(dead_nodes, drained=drained)
         missing = [l for l in range(self.num_layers) if l not in survivors]
         assert not missing, f"layers {missing} lost (>f failures in a stage)"
-        self.runs = [self._bind(inst, layers=None, source_states=survivors)  # type: ignore
+        self.runs = [self._bind_run(inst, layers=None,
+                                    source_states=survivors)
                      for inst in self.engine.instances]
+        self.bind()        # swap programs by lookup (zero compiles if warm)
         return {"copied_bytes": result.copy_bytes(),
-                "num_pipelines": len(self.runs)}
+                "num_pipelines": len(self.runs),
+                "cache": self.cache.stats.as_dict()}
 
     def handle_join(self, new_nodes: list) -> Dict:
         """Elastic scale-up: re-plan globally over the larger cluster and
@@ -287,10 +502,19 @@ class HeteroTrainer:
             for l, st in run.states.items():
                 survivors.setdefault(l, st)
         result = self.engine.handle_join(list(new_nodes))
-        self.runs = [self._bind(inst, layers=None, source_states=survivors)  # type: ignore
+        self.runs = [self._bind_run(inst, layers=None,
+                                    source_states=survivors)
                      for inst in self.engine.instances]
+        self.bind()
         return {"copied_bytes": result.copy_bytes(),
-                "num_pipelines": len(self.runs)}
+                "num_pipelines": len(self.runs),
+                "cache": self.cache.stats.as_dict()}
+
+    def recover(self, dead: Set[str], drained: bool = False) -> Dict:
+        return self.handle_failure(set(dead), drained=drained)
+
+    def join(self, nodes: List[str]) -> Dict:
+        return self.handle_join(list(nodes))
 
     # ------------------------------------------------------------------
     def replica_divergence(self) -> float:
@@ -307,19 +531,41 @@ class HeteroTrainer:
                 worst = max(worst, max(jax.tree.leaves(d), default=0.0))
         return worst
 
-    def full_params(self) -> Dict:
-        """Reassemble the canonical full tree from replica 0's layers
-        (for checkpointing / evaluation)."""
-        states = {}
+    def _assemble(self, field: str) -> Dict:
+        """Reassemble a canonical full tree ('p'/'m'/'v') from replica-0
+        layer states.  Leaves are COPIES: later (donating) train steps
+        must not invalidate what we hand out."""
+        states: Dict[int, LayerState] = {}
         for run in self.runs:
             for l, st in run.states.items():
                 states.setdefault(l, st)
-        blocks = [states[1 + i]["p"] for i in range(self.model.arch.num_layers)]
-        params = {
-            "embed": states[0]["p"]["embed"],
+        blocks = [states[1 + i][field]
+                  for i in range(self.model.arch.num_layers)]
+        tree = {
+            "embed": jax.tree.map(jnp.copy, states[0][field]["embed"]),
             "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
-            "final_norm": states[self.num_layers - 1]["p"]["final_norm"],
+            "final_norm": jax.tree.map(
+                jnp.copy, states[self.num_layers - 1][field]["final_norm"]),
         }
-        if "head" in states[self.num_layers - 1]["p"]:
-            params["head"] = states[self.num_layers - 1]["p"]["head"]
-        return params
+        if "head" in states[self.num_layers - 1][field]:
+            tree["head"] = jax.tree.map(
+                jnp.copy, states[self.num_layers - 1][field]["head"])
+        return tree
+
+    def full_params(self) -> Dict:
+        """Canonical full param tree from replica 0's layers (for
+        checkpointing / evaluation)."""
+        return self._assemble("p")
+
+    def snapshot(self, data_state: Optional[Dict] = None,
+                 rng_seed: int = 0):
+        """Host-side TrainState (ckpt/checkpoint.py format): params and
+        both Adam moments reassembled into the canonical stacked-block
+        layout.  The one place a host sync is the point."""
+        from repro.ckpt import TrainState
+        params = self._assemble("p")
+        opt = adamw.AdamWState(self.opt_step, self._assemble("m"),
+                               self._assemble("v"))
+        return TrainState(step=int(self.opt_step), params=params,
+                          opt_state=opt, data_state=data_state or {},
+                          rng_seed=rng_seed)

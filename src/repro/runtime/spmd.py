@@ -20,6 +20,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models import Model
 from repro.optim import adamw
+from repro.runtime.executor import (Executor, ExecutorUnsupported,
+                                    ProgramCache, avals_of as _avals_of)
 from repro.runtime.sharding import ShardingStrategy
 
 
@@ -122,3 +124,110 @@ def decode_bundle(model: Model, strategy: ShardingStrategy, mesh: Mesh,
         fn=build_decode_step(model),
         in_shardings=(pspec, bshard, cspec, scalar),
         out_shardings=(bshard, cspec))
+
+
+# ----------------------------------------------------------------------
+# The homogeneous fast path behind the Executor interface
+# ----------------------------------------------------------------------
+class SPMDExecutor(Executor):
+    """Zero-failure homogeneous fast path: the whole job is ONE donated
+    SPMD train program (DESIGN.md §8).
+
+    With all pipelines running the same template, DP folds the job into
+    a single program — either the plain fused train step (no mesh), the
+    sharded `train_bundle` program (mesh + strategy), or the
+    shard_map-pipelined step from runtime/spmd_pipeline.py.  The program
+    is AOT-compiled into a ProgramCache so steady-state stepping is a
+    cache lookup and tests can assert zero recompiles.
+
+    ``recover``/``join`` raise ExecutorUnsupported by design: a single
+    SPMD program cannot re-express a heterogeneous survivor set.  The
+    engine reacts by rebinding a HeteroTrainer (runtime/pipeline.py)
+    from this executor's snapshot — that is the designed degradation
+    path, not an error in it.
+    """
+
+    def __init__(self, model: Model, params: Dict,
+                 opt_cfg: adamw.AdamWConfig,
+                 mesh: Optional[Any] = None,
+                 strategy: Optional[ShardingStrategy] = None,
+                 shape: Optional[ShapeConfig] = None,
+                 engine: Optional[Any] = None,
+                 cache: Optional[ProgramCache] = None):
+        self.model = model
+        self.opt_cfg = opt_cfg
+        self.mesh = mesh
+        self.strategy = strategy
+        self.shape = shape
+        self.engine = engine
+        self.cache = cache or ProgramCache()
+        # sole ownership: the step program donates these buffers
+        self.params = jax.tree.map(jnp.copy, params)
+        self.opt_state = adamw.init(self.params)
+        if engine is not None and hasattr(engine, "attach_executor"):
+            engine.attach_executor(self)
+        self.bind()
+
+    # ------------------------------------------------------------------
+    def _batch_avals(self, batch: Dict) -> Dict:
+        return _avals_of(batch)
+
+    def _program(self, batch_avals: Dict):
+        key = ("spmd-train",
+               tuple(sorted((k, tuple(v.shape), str(v.dtype))
+                            for k, v in batch_avals.items())))
+
+        def build():
+            p_avals = _avals_of(self.params)
+            o_avals = _avals_of(self.opt_state)
+            if self.mesh is not None and self.strategy is not None:
+                bundle = train_bundle(self.model, self.opt_cfg,
+                                      self.strategy, self.mesh,
+                                      p_avals, o_avals, self.shape)
+                jitted = bundle.jit(donate=(0, 1))
+            else:
+                jitted = jax.jit(build_train_step(self.model, self.opt_cfg),
+                                 donate_argnums=(0, 1))
+            return jitted.lower(p_avals, o_avals, batch_avals).compile()
+
+        return self.cache.get_or_build(key, build)
+
+    # Executor interface ------------------------------------------------
+    def bind(self) -> None:
+        """Precompile for the configured global-batch shape when known;
+        otherwise the first step() compiles (and caches) lazily."""
+        if self.shape is not None:
+            # launch/specs.py owns the batch-aval layout (incl. the
+            # frontend_embeds entry for VLM/audio models — train_bundle's
+            # in_shardings expect the same pytree structure)
+            from repro.launch import specs as sp
+            self._program(sp.batch_specs(self.model.arch, self.shape))
+
+    def step(self, batch: Dict) -> Dict:
+        batch = {k: jnp.asarray(v).astype(jnp.int32)
+                 if k in ("tokens", "labels") else jnp.asarray(v)
+                 for k, v in batch.items() if not k.startswith("_")}
+        prog = self._program(self._batch_avals(batch))
+        self.params, self.opt_state, stats = prog(
+            self.params, self.opt_state, batch)
+        return stats
+
+    def recover(self, dead, drained: bool = False) -> Dict:
+        raise ExecutorUnsupported(
+            "SPMD fast path is single-program: a heterogeneous survivor "
+            "set needs a HeteroTrainer rebind (from snapshot())")
+
+    def join(self, nodes) -> Dict:
+        raise ExecutorUnsupported(
+            "SPMD fast path cannot grow in place; rebind from snapshot()")
+
+    def snapshot(self, data_state: Optional[Dict] = None,
+                 rng_seed: int = 0):
+        from repro.ckpt import TrainState
+        return TrainState(step=int(self.opt_state.step),
+                          params=jax.tree.map(jnp.copy, self.params),
+                          opt_state=type(self.opt_state)(
+                              step=self.opt_state.step,
+                              m=jax.tree.map(jnp.copy, self.opt_state.m),
+                              v=jax.tree.map(jnp.copy, self.opt_state.v)),
+                          data_state=data_state or {}, rng_seed=rng_seed)

@@ -1,19 +1,30 @@
-"""SPMD pipeline-parallel forward via shard_map (the TPU-native mapping
-of one Oobleck pipeline template — DESIGN.md §2).
+"""SPMD pipeline-parallel train/forward via shard_map (the TPU-native
+mapping of one Oobleck pipeline template — DESIGN.md §2, §8).
 
 Each stage of a (uniform) template owns L/S consecutive blocks; the
-template's GPipe-style schedule is a static loop of M + S - 1 ticks in
-which every stage computes one microbatch and hands its activation to
-stage+1 with ``jax.lax.ppermute``.  This is the program a pipeline
-instance launches per microbatch wave on real hardware; the
-single-controller HeteroTrainer (pipeline.py) remains the reference for
-heterogeneous stage layouts (SPMD requires every shard to run the same
-program, so stages must be uniform here — Oobleck's planner emits
-near-uniform splits for homogeneous-cost blocks, making this the
-production fast path).
+template's schedule is a static loop of M + S - 1 ticks in which every
+stage computes one microbatch and hands its activation to stage+1 with
+``jax.lax.ppermute``.  This is the program a pipeline instance launches
+per microbatch wave on real hardware; the single-controller
+HeteroTrainer (pipeline.py) remains the reference for heterogeneous
+stage layouts (SPMD requires every shard to run the same program, so
+stages must be uniform here — Oobleck's planner emits near-uniform
+splits for homogeneous-cost blocks, making this the production fast
+path).
+
+Training runs in ONE SPMD program (``make_pipeline_train_step``):
+differentiating through the scheduled scan transposes every
+``ppermute``, so the backward pass is the same pipeline run in reverse
+— activations hop forward, cotangents hop backward, per-stage gradient
+accumulation falls out of the scan transpose exactly as 1F1B
+accumulates per-microbatch grads.  Loss and optimizer update live in
+the same jitted program with params/opt-state donated, so the
+homogeneous zero-failure case trains with no per-step host round trips
+at all.
 
 Correctness is pinned by tests/test_spmd_pipeline.py: the pipelined
-forward equals the plain forward bit-for-bit on a multi-device host mesh.
+forward equals the plain forward bit-for-bit on a multi-device host
+mesh, and the pipelined train step tracks a plain full-model step.
 """
 from __future__ import annotations
 
@@ -26,6 +37,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.models import Model
+from repro.optim import adamw
 
 
 def stack_by_stage(params_blocks, num_stages: int):
@@ -85,6 +97,39 @@ def pipeline_forward(model: Model, params: Dict, x_mb: jax.Array,
         check_rep=False)
     stacked = fn(blocks, x_mb)          # [S*M, b, s, d] stage-major
     return stacked.reshape(S, M, *x_mb.shape[1:])[-1]
+
+
+# ----------------------------------------------------------------------
+# Training: the same schedule, differentiated — one SPMD program
+# ----------------------------------------------------------------------
+def pipeline_loss(model: Model, params: Dict, tokens_mb: jax.Array,
+                  labels_mb: jax.Array, mesh: Mesh,
+                  stage_axis: str = "stage") -> jax.Array:
+    """Mean next-token NLL over [M, b, s] microbatches through the
+    pipelined forward.  Differentiable: the ppermute/scan schedule
+    transposes into the reverse-order backward pipeline."""
+    from repro.models.layers import cross_entropy
+    logits = pipeline_logits(model, params, tokens_mb, mesh, stage_axis)
+    nll = jax.vmap(lambda lg, lb: cross_entropy(lg[:, :-1], lb[:, 1:]))(
+        logits, labels_mb)
+    return jnp.mean(nll)
+
+
+def make_pipeline_train_step(model: Model, opt_cfg: adamw.AdamWConfig,
+                             mesh: Mesh, stage_axis: str = "stage",
+                             donate: bool = True):
+    """Jitted train step for the homogeneous fast path: pipelined
+    forward, transposed-pipeline backward, AdamW — a single donated
+    SPMD program, so a zero-failure cluster never leaves the device
+    between steps.  tokens_mb/labels_mb: [M, b, s]."""
+    def step(params, opt_state, tokens_mb, labels_mb):
+        loss, grads = jax.value_and_grad(
+            lambda p: pipeline_loss(model, p, tokens_mb, labels_mb,
+                                    mesh, stage_axis))(params)
+        params2, opt2, stats = adamw.apply(opt_cfg, params, grads, opt_state)
+        return params2, opt2, {"loss": loss, **stats}
+
+    return jax.jit(step, donate_argnums=(0, 1) if donate else ())
 
 
 def pipeline_logits(model: Model, params: Dict, tokens_mb: jax.Array,

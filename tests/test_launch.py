@@ -93,7 +93,8 @@ def test_hloparse_real_program():
     x = jax.ShapeDtypeStruct((16, 64), jnp.float32)
     c = jax.jit(f).lower(w, x).compile()
     st = analyze(c.as_text())
-    xla = c.cost_analysis().get("flops", 0)
+    from repro.launch.mesh import cost_analysis_dict
+    xla = cost_analysis_dict(c).get("flops", 0)
     assert st.dot_flops == pytest.approx(2 * 16 * 64 * 32, rel=0.01)
     assert st.dot_flops <= xla * 1.05 + 1e5
 
