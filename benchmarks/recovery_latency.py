@@ -1,0 +1,187 @@
+"""Failure -> first-step latency through the recovery data plane
+(DESIGN.md §9), decomposed into replan / transfer / compile phases.
+
+Analytic mode (default) drives the REAL reconfigurator + transfer
+scheduler on target-hardware constants (utils/hw.py) for clusters of
+16..64 nodes and three failure shapes:
+
+  * single     — one node dies;
+  * rack       — a whole pod dies as one correlated burst;
+  * cross_pod  — the same single failure, but under a pathological
+                 topology where every replica is in a different pod, so
+                 every recovery copy rides DCN instead of ICI.
+
+Each row reports the phase decomposition, the stream count, the
+pod-local byte fraction, and the SERIAL sum-of-bytes accounting the
+simulator used to charge — the max-over-parallel-streams makespan must
+beat it whenever more than one stream is in flight.
+
+``--real`` additionally runs a small HeteroTrainer end-to-end on actual
+arrays: warm the template cache, kill a node, and wall-clock the
+recover() call (replan + data-plane state copies) and the first
+post-recovery step, asserting the compile leg is ZERO (cache hit).
+
+    PYTHONPATH=src:. python benchmarks/recovery_latency.py [--real]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+from benchmarks.common import Csv
+from repro.configs import get_arch
+from repro.core import EngineConfig, OobleckEngine, build_profile
+
+
+def _profile(layers=26):
+    arch = dataclasses.replace(get_arch("gpt2"), name=f"gpt2_L{layers}",
+                               num_layers=layers)
+    return build_profile(arch, microbatch=2, seq_len=1024)
+
+
+def make_engine(profile, n_nodes, nodes_per_pod, f=2, n0=4):
+    return OobleckEngine(
+        profile, [f"node{i:03d}" for i in range(n_nodes)],
+        EngineConfig(fault_tolerance=f, global_batch=1024, microbatch=2,
+                     gpus_per_node=1, n0_override=n0,
+                     nodes_per_pod=nodes_per_pod))
+
+
+def one_failure(csv: Csv, profile, n_nodes, nodes_per_pod, scenario: str,
+                results: dict) -> None:
+    eng = make_engine(profile, n_nodes, nodes_per_pod)
+    if scenario == "rack":
+        # a correlated burst spanning pipelines: one node from each of
+        # the first k replicas dies at once (power/ToR failure shape) —
+        # every damaged pipeline reinstantiates and copies state, capped
+        # so at least one replica of every layer survives
+        floor = (eng.spec.f + 1) * eng.spec.n0
+        k = min(len(eng.instances) - 1, 4, len(eng.nodes) - floor)
+        dead = {inst.nodes[-1] for inst in eng.instances[:max(k, 1)]}
+    else:
+        dead = {eng.instances[0].nodes[-1]}
+    t0 = time.perf_counter()
+    result = eng.handle_failure(dead)
+    plan = eng.transfer_plan(result, dead=dead)
+    bd = {"replan": result.replan_seconds, "transfer": plan.makespan(),
+          "compile": 0.0, "barrier": 1.0}
+    wall_us = (time.perf_counter() - t0) * 1e6
+    total = sum(bd.values())
+    row = {"replan_s": bd["replan"], "transfer_s": bd["transfer"],
+           "compile_s": bd["compile"], "barrier_s": bd["barrier"],
+           "total_s": total, "streams": len(plan.streams),
+           "pod_local": plan.pod_local_fraction(),
+           "serial_s": plan.serial_seconds(),
+           "bytes": plan.total_bytes}
+    name = f"recovery,n={n_nodes},pods={nodes_per_pod},{scenario}"
+    csv.add(name, wall_us,
+            f"replan={bd['replan']:.4f}s|transfer={bd['transfer']:.3f}s"
+            f"|compile=0s|total={total:.3f}s|streams={len(plan.streams)}"
+            f"|podlocal={plan.pod_local_fraction():.2f}"
+            f"|serial={plan.serial_seconds():.3f}s")
+    results[name] = row
+
+
+def real_run(csv: Csv, results: dict) -> None:
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import reduced
+    from repro.data import GlobalBatchDispenser, SyntheticLM
+    from repro.models import Model
+    from repro.optim import adamw
+    from repro.runtime import HeteroTrainer, track_compiles
+
+    arch = reduced(get_arch("gpt3_medium"), layers=4)
+    model = Model(arch, dtype=jnp.float32, remat=False, attn_impl="naive",
+                  scan_layers=False)
+    params = model.init(jax.random.PRNGKey(0))
+    profile = build_profile(arch, microbatch=2, seq_len=32)
+    engine = OobleckEngine(
+        profile, [f"n{i}" for i in range(5)],
+        EngineConfig(fault_tolerance=1, global_batch=16, microbatch=2,
+                     gpus_per_node=1, n0_override=2, nodes_per_pod=4))
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=0, weight_decay=0.0)
+    trainer = HeteroTrainer(model, engine, params, opt_cfg)
+    t0 = time.perf_counter()
+    trainer.warm_templates()
+    warm_s = time.perf_counter() - t0
+    disp = GlobalBatchDispenser(SyntheticLM(arch.vocab_size, 32, seed=1))
+
+    def microbatches(batch):
+        return [{k: v[i * 2:(i + 1) * 2] for k, v in batch.items()
+                 if not k.startswith("_")}
+                for i in range(batch["tokens"].shape[0] // 2)]
+
+    def drive():
+        batches = disp.next_step(engine.batch.minibatch_sizes())
+        out = trainer.train_step([microbatches(b) for b in batches])
+        out["loss"].block_until_ready()
+        return out
+
+    drive()
+    victim = engine.instances[0].nodes[-1]
+    with track_compiles() as log:
+        t0 = time.perf_counter()
+        info = trainer.recover({victim})
+        recover_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        drive()
+        first_step_s = time.perf_counter() - t0
+    assert log.backend_compiles == 0, "warm cache must make compile=0"
+    replan_s = info["breakdown"]["replan"]
+    row = {"warm_s": warm_s, "replan_s": replan_s,
+           "copy_exec_s": recover_s - replan_s,
+           "first_step_s": first_step_s, "compiles": log.backend_compiles,
+           "modeled_transfer_s": info["transfer"]["seconds"],
+           "copied_bytes": info["copied_bytes"]}
+    csv.add("recovery,real,5nodes,kill1",
+            (recover_s + first_step_s) * 1e6,
+            f"replan={replan_s:.4f}s|copy_exec={row['copy_exec_s']:.3f}s"
+            f"|first_step={first_step_s:.3f}s|compiles=0")
+    results["real"] = row
+
+
+def main(csv=None, argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=int, nargs="*", default=[16, 32, 64])
+    ap.add_argument("--layers", type=int, default=26)
+    ap.add_argument("--real", action="store_true",
+                    help="also run the small real-arrays measurement")
+    ap.add_argument("--json", default="")
+    args = ap.parse_args(argv)
+
+    csv = csv or Csv()
+    results: dict = {}
+    profile = _profile(args.layers)
+    for n in args.sizes:
+        one_failure(csv, profile, n, nodes_per_pod=8, scenario="single",
+                    results=results)
+        one_failure(csv, profile, n, nodes_per_pod=8, scenario="rack",
+                    results=results)
+        # pathological: every node its own pod -> every copy rides DCN
+        one_failure(csv, profile, n, nodes_per_pod=1, scenario="cross_pod",
+                    results=results)
+    if args.real:
+        real_run(csv, results)
+
+    # headline checks the acceptance criteria name
+    for n in args.sizes:
+        local = results[f"recovery,n={n},pods=8,single"]
+        cross = results[f"recovery,n={n},pods=1,cross_pod"]
+        assert cross["transfer_s"] > local["transfer_s"], \
+            "pod-local copies must be cheaper than cross-pod"
+        if local["streams"] > 1:
+            assert local["transfer_s"] < local["serial_s"], \
+                "max-over-streams must beat the serial sum"
+    if args.json:
+        import os
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,9 @@ Emits ``name,us_per_call,derived`` CSV rows:
   planning_scale     — beyond-paper: planner/reconfig latency vs cluster size
   step_time          — compiled per-template programs vs eager reference
                        (steady-state + reconfiguration-to-first-step)
+  recovery_latency   — failure->first-step decomposition through the
+                       recovery data plane (replan / transfer / compile),
+                       pod-local vs cross-pod stream makespans
 """
 from __future__ import annotations
 
@@ -21,9 +24,9 @@ from benchmarks.common import Csv
 
 def main() -> None:
     from benchmarks import (fig10_spot_traces, fig11_breakdown,
-                            planning_scale, roofline_report, step_time,
-                            table2_throughput, table3_planning,
-                            table4_ckpt_ablation)
+                            planning_scale, recovery_latency,
+                            roofline_report, step_time, table2_throughput,
+                            table3_planning, table4_ckpt_ablation)
     only = sys.argv[1] if len(sys.argv) > 1 else None
     suites = {
         "table2": table2_throughput.main,
@@ -34,6 +37,7 @@ def main() -> None:
         "roofline": roofline_report.main,
         "planning_scale": planning_scale.main,
         "step_time": step_time.main,
+        "recovery_latency": recovery_latency.main,
     }
     if only is not None and only not in suites:
         print(f"unknown suite {only!r}; choose from: {', '.join(suites)}",

@@ -1,3 +1,5 @@
-from repro.ckpt.checkpoint import CheckpointManager, TrainState
+from repro.ckpt.checkpoint import (CheckpointError, CheckpointManager,
+                                   TrainState, record_hash)
 
-__all__ = ["CheckpointManager", "TrainState"]
+__all__ = ["CheckpointError", "CheckpointManager", "TrainState",
+           "record_hash"]

@@ -1,28 +1,50 @@
-"""Layer-granular checkpointing with async snapshot and atomic manifest.
+"""Async sharded checkpointing with content-addressed layer shards
+(DESIGN.md §9).
 
 The checkpoint unit is one LAYER's state (params + both Adam moments) —
 the same unit Oobleck copies between replicas during reconfiguration, so
-the restart path (used only when < (f+1)*n0 nodes remain, §3.4) and the
-live-copy path share a format.
+the restart path (used only when < (f+1)*n0 nodes remain, §3.4), the
+live-copy data plane (runtime/transfer.py) and the storage format all
+share a granularity.
 
 Layout:
-    <dir>/step_<N>/layer_<i>.npz      one record per model layer
-    <dir>/step_<N>/extra.npz          embed/head/final-norm + opt scalars
-    <dir>/step_<N>/MANIFEST.json      written LAST via atomic rename;
-                                      a step without a manifest is garbage
-Async mode snapshots arrays on the caller thread (cheap host copy) and
-writes on a daemon thread — training resumes immediately, matching the
-CheckFreq-style overlap discussed in §7.4.3.
+    <dir>/shards/<hash>.npz           content-addressed layer records
+    <dir>/step_<N>/MANIFEST.json      layer index -> shard hash + sizes,
+                                      written LAST via atomic rename; a
+                                      step without a manifest is garbage
+
+Properties:
+
+  * **content hashes** — a shard's name is the sha256 of its arrays
+    (keys, dtypes, shapes, bytes), so identical layer states are stored
+    once no matter how many steps reference them;
+  * **incremental saves** — a layer whose hash is already on disk is
+    skipped entirely (``stats["skipped_shards"]``); only changed state
+    pays write bandwidth;
+  * **async** — ``save()`` snapshots arrays to host numpy on the caller
+    thread (a consistent view) and enqueues the write to ONE daemon
+    writer thread; training resumes immediately and never waits for a
+    previous save (the CheckFreq-style overlap of §7.4.3);
+  * **safe GC** — garbage collection runs under the manager lock and
+    pins every hash of queued/in-flight saves, so a background save can
+    never lose a shard it is about to reference (the race the old
+    per-step layout had: GC deleting the step still being written);
+  * **layout-independent restore** — manifests know layers, not
+    templates; ``restore`` reassembles the canonical stacked-block tree
+    for ANY template set to rebind against, and ``layer_record`` serves
+    single layers (the granularity a partially-restored pipeline needs).
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
+import queue
 import shutil
 import tempfile
 import threading
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Set, Tuple
 
 import jax
 import numpy as np
@@ -37,6 +59,37 @@ def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
     return out
 
 
+def record_hash(rec: Dict[str, np.ndarray]) -> str:
+    """Content hash of one shard: keys, dtypes, shapes and raw bytes.
+    (Hashing the LOGICAL content, not the .npz file — zip containers
+    embed timestamps and are not byte-stable.)"""
+    h = hashlib.sha256()
+    for key in sorted(rec):
+        a = np.ascontiguousarray(rec[key])
+        h.update(key.encode())
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()[:32]
+
+
+def record_nbytes(rec: Dict[str, np.ndarray]) -> int:
+    return sum(int(a.nbytes) for a in rec.values())
+
+
+def _save_npz(path: str, rec: Dict[str, np.ndarray]) -> None:
+    """Single seam for shard writes (tests hook it to stall the writer
+    mid-save and prove GC cannot hurt an in-flight step)."""
+    np.savez(path, **rec)
+
+
+def _save_manifest(path: str, meta: Dict) -> None:
+    """Seam for the manifest write — the other half of the GC race
+    window: shards durable, manifest not yet visible."""
+    with open(path, "w") as f:
+        json.dump(meta, f)
+
+
 @dataclasses.dataclass
 class TrainState:
     step: int
@@ -46,6 +99,10 @@ class TrainState:
     rng_seed: int
 
 
+class CheckpointError(RuntimeError):
+    """A background save failed; surfaced on wait()/the next save."""
+
+
 class CheckpointManager:
     def __init__(self, directory: str, num_layers: int,
                  async_mode: bool = True, keep: int = 2):
@@ -53,38 +110,110 @@ class CheckpointManager:
         self.num_layers = num_layers
         self.async_mode = async_mode
         self.keep = keep
-        self._thread: Optional[threading.Thread] = None
-        os.makedirs(directory, exist_ok=True)
+        self.stats: Dict[str, int] = {"saves": 0, "saved_shards": 0,
+                                      "skipped_shards": 0, "gc_shards": 0,
+                                      "gc_steps": 0}
+        self._lock = threading.Lock()
+        self._pinned: Dict[str, int] = {}      # hash -> pending refcount
+        # bounded: each payload is a full host snapshot, so backpressure
+        # kicks in only when storage falls 2 saves behind (the old
+        # manager blocked on EVERY save; unbounded would risk host OOM)
+        self._queue: "queue.Queue[Dict]" = queue.Queue(maxsize=2)
+        self._worker: Optional[threading.Thread] = None
+        self._errors: List[BaseException] = []
+        os.makedirs(self.shard_dir, exist_ok=True)
+
+    @property
+    def shard_dir(self) -> str:
+        return os.path.join(self.dir, "shards")
+
+    def _shard_path(self, h: str) -> str:
+        return os.path.join(self.shard_dir, f"{h}.npz")
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
 
     # ------------------------------------------------------------------
+    # Save
+    # ------------------------------------------------------------------
     def save(self, state: TrainState, block: bool = False) -> None:
-        # Snapshot to host numpy NOW (consistent view), write async.
+        """Snapshot to host numpy NOW (consistent view), hash each layer
+        shard, and hand the write to the background thread — the caller
+        never waits for a previous save to finish."""
+        self._raise_pending_errors()
         payload = self._snapshot(state)
+        self.stats["saves"] += 1
         if self.async_mode and not block:
-            self.wait()
-            self._thread = threading.Thread(
-                target=self._write, args=(payload,), daemon=True)
-            self._thread.start()
+            with self._lock:
+                for h, _ in payload["shards"]:
+                    self._pinned[h] = self._pinned.get(h, 0) + 1
+            self._ensure_worker()
+            self._queue.put(payload)
         else:
+            self.wait()                 # keep manifest order monotonic
             self._write(payload)
 
     def wait(self) -> None:
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
+        """Block until every queued save is durable; re-raise background
+        failures."""
+        if self._worker is not None:
+            self._queue.join()
+        self._raise_pending_errors()
 
+    def _raise_pending_errors(self) -> None:
+        with self._lock:
+            errors, self._errors = self._errors, []
+        if errors:
+            raise CheckpointError(
+                f"async checkpoint save failed: {errors[0]!r}") from errors[0]
+
+    def _ensure_worker(self) -> None:
+        if self._worker is None or not self._worker.is_alive():
+            self._worker = threading.Thread(target=self._drain, daemon=True)
+            self._worker.start()
+
+    def _drain(self) -> None:
+        while True:
+            payload = self._queue.get()
+            try:
+                self._write(payload)
+            except BaseException as e:      # surfaced on wait()/next save
+                with self._lock:
+                    self._errors.append(e)
+            finally:
+                if payload.get("pinned"):
+                    with self._lock:
+                        for h, _ in payload["shards"]:
+                            n = self._pinned.get(h, 0) - 1
+                            if n <= 0:
+                                self._pinned.pop(h, None)
+                            else:
+                                self._pinned[h] = n
+                self._queue.task_done()
+
+    # ------------------------------------------------------------------
     def _snapshot(self, state: TrainState) -> Dict:
         params, opt = state.params, state.opt_state
-        layers: List[Dict[str, np.ndarray]] = []
         blocks = params["blocks"]
         m_blocks = opt.m["blocks"]
         v_blocks = opt.v["blocks"]
+        layer_entries: List[Dict] = []
+        shards: List[Tuple[str, Dict[str, np.ndarray]]] = []
+        seen: Set[str] = set()
+
+        def add(rec: Dict[str, np.ndarray]) -> Dict:
+            h = record_hash(rec)
+            if h not in seen:
+                seen.add(h)
+                shards.append((h, rec))
+            return {"hash": h, "nbytes": record_nbytes(rec)}
+
         for i in range(self.num_layers):
             rec: Dict[str, np.ndarray] = {}
             rec.update(_flatten(jax.tree.map(lambda t: t[i], blocks), "p"))
             rec.update(_flatten(jax.tree.map(lambda t: t[i], m_blocks), "m"))
             rec.update(_flatten(jax.tree.map(lambda t: t[i], v_blocks), "v"))
-            layers.append(rec)
+            layer_entries.append(add(rec))
         extra: Dict[str, np.ndarray] = {}
         for part in ("embed", "final_norm", "head"):
             if part in params:
@@ -94,39 +223,80 @@ class CheckpointManager:
         extra["opt_step"] = np.asarray(opt.step)
         return {
             "step": state.step,
-            "layers": layers,
-            "extra": extra,
+            "shards": shards,
+            "pinned": True,
             "meta": {"step": state.step, "num_layers": self.num_layers,
                      "data_state": state.data_state,
-                     "rng_seed": state.rng_seed},
+                     "rng_seed": state.rng_seed,
+                     "layers": layer_entries,
+                     "extra": add(extra)},
         }
 
     def _write(self, payload: Dict) -> None:
+        # 1. shards (content-addressed: existing hash == incremental skip)
+        for h, rec in payload["shards"]:
+            final = self._shard_path(h)
+            if os.path.exists(final):
+                self.stats["skipped_shards"] += 1
+                continue
+            fd, tmp = tempfile.mkstemp(dir=self.shard_dir, prefix=".tmp_",
+                                       suffix=".npz")
+            os.close(fd)
+            try:
+                _save_npz(tmp, rec)
+                os.replace(tmp, final)
+            finally:
+                if os.path.exists(tmp):
+                    os.remove(tmp)
+            self.stats["saved_shards"] += 1
+        # 2. manifest, LAST, via atomic rename of the step dir
         step = payload["step"]
-        final = os.path.join(self.dir, f"step_{step:08d}")
         tmp = tempfile.mkdtemp(dir=self.dir, prefix=".tmp_")
         try:
-            for i, rec in enumerate(payload["layers"]):
-                np.savez(os.path.join(tmp, f"layer_{i:04d}.npz"), **rec)
-            np.savez(os.path.join(tmp, "extra.npz"), **payload["extra"])
-            with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
-                json.dump(payload["meta"], f)
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.rename(tmp, final)
+            _save_manifest(os.path.join(tmp, "MANIFEST.json"),
+                           payload["meta"])
+            final = self._step_dir(step)
+            with self._lock:
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)
         finally:
             if os.path.exists(tmp):
                 shutil.rmtree(tmp, ignore_errors=True)
-        self._gc()
-
-    def _gc(self) -> None:
-        steps = self.list_steps()
-        for s in steps[:-self.keep]:
-            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
-                          ignore_errors=True)
+        self.gc()
 
     # ------------------------------------------------------------------
-    def list_steps(self) -> List[int]:
+    # GC: never touches a shard an in-flight save references
+    # ------------------------------------------------------------------
+    def gc(self) -> None:
+        with self._lock:
+            steps = self._list_steps_locked()
+            drop, kept = steps[:-self.keep], steps[-self.keep:]
+            referenced: Set[str] = set(self._pinned)
+            for s in kept:
+                meta = self._read_manifest(s)
+                referenced.update(e["hash"] for e in meta["layers"])
+                referenced.add(meta["extra"]["hash"])
+            for s in drop:
+                shutil.rmtree(self._step_dir(s), ignore_errors=True)
+                self.stats["gc_steps"] += 1
+            for name in os.listdir(self.shard_dir):
+                if not name.endswith(".npz") or name.startswith(".tmp_"):
+                    continue
+                if name[:-len(".npz")] not in referenced:
+                    try:
+                        os.remove(os.path.join(self.shard_dir, name))
+                        self.stats["gc_shards"] += 1
+                    except OSError:
+                        pass
+
+    # kept under its historical name for callers/tests
+    _gc = gc
+
+    # ------------------------------------------------------------------
+    # Read side
+    # ------------------------------------------------------------------
+    def _list_steps_locked(self) -> List[int]:
         out = []
         for name in sorted(os.listdir(self.dir)):
             full = os.path.join(self.dir, name)
@@ -135,16 +305,51 @@ class CheckpointManager:
                 out.append(int(name.split("_")[1]))
         return sorted(out)
 
+    def list_steps(self) -> List[int]:
+        return self._list_steps_locked()
+
+    def _read_manifest(self, step: int) -> Dict:
+        with open(os.path.join(self._step_dir(step), "MANIFEST.json")) as f:
+            return json.load(f)
+
+    def _load_shard(self, h: str) -> Dict[str, np.ndarray]:
+        return dict(np.load(self._shard_path(h)))
+
+    def layer_record(self, step: int, layer: int) -> Dict[str, np.ndarray]:
+        """One layer's flat state record ('p...'/'m...'/'v...' keys) —
+        the same unit the recovery data plane moves between replicas."""
+        meta = self._read_manifest(step)
+        return self._load_shard(meta["layers"][layer]["hash"])
+
+    def verify(self, step: int) -> bool:
+        """Recompute every referenced shard's content hash: True iff the
+        step is bit-exact on disk (fault-injection suites assert this —
+        an interrupted/concurrent save must never leave a listed step
+        corrupt)."""
+        try:
+            meta = self._read_manifest(step)
+            hashes = [e["hash"] for e in meta["layers"]]
+            hashes.append(meta["extra"]["hash"])
+            return all(record_hash(self._load_shard(h)) == h for h in hashes)
+        except Exception:
+            # the contract is "False on ANY corruption": a truncated
+            # .npz raises BadZipFile/EOFError, a mangled manifest
+            # JSONDecodeError — none of them may escape
+            return False
+
     def restore(self, template_params: Any, template_opt: Any,
                 step: Optional[int] = None) -> TrainState:
-        """Restore into the structure of (template_params, template_opt)."""
+        """Restore into the structure of (template_params, template_opt).
+
+        The manifest indexes layers, not pipeline templates: the same
+        checkpoint restores under ANY template layout (different node
+        counts, stage tilings) — the caller rebinds the result against
+        whatever template set the current cluster supports."""
         steps = self.list_steps()
         if not steps:
             raise FileNotFoundError(f"no complete checkpoint in {self.dir}")
         step = steps[-1] if step is None else step
-        d = os.path.join(self.dir, f"step_{step:08d}")
-        with open(os.path.join(d, "MANIFEST.json")) as f:
-            meta = json.load(f)
+        meta = self._read_manifest(step)
 
         def load_into(tree, record, prefix):
             flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
@@ -159,12 +364,12 @@ class CheckpointManager:
         blocks_t = jax.tree.map(lambda t: t[0], template_params["blocks"])
         p_layers, m_layers, v_layers = [], [], []
         for i in range(meta["num_layers"]):
-            rec = dict(np.load(os.path.join(d, f"layer_{i:04d}.npz")))
+            rec = self._load_shard(meta["layers"][i]["hash"])
             p_layers.append(load_into(blocks_t, rec, "p"))
             m_layers.append(load_into(blocks_t, rec, "m"))
             v_layers.append(load_into(blocks_t, rec, "v"))
         stack = lambda layers: jax.tree.map(lambda *xs: np.stack(xs), *layers)
-        extra = dict(np.load(os.path.join(d, "extra.npz")))
+        extra = self._load_shard(meta["extra"]["hash"])
         params = {"blocks": stack(p_layers)}
         m = {"blocks": stack(m_layers)}
         v = {"blocks": stack(v_layers)}

@@ -52,6 +52,9 @@ class EngineConfig:
     planner_mode: str = "fast"
     max_stages: Optional[int] = None
     bucket_cap_bytes: int = 64 * 1024 * 1024
+    # pod size for the default recovery-data-plane topology (DESIGN.md
+    # §9): consecutive nodes share a pod/ICI; pods talk over DCN
+    nodes_per_pod: int = 8
 
 
 @dataclasses.dataclass
@@ -67,9 +70,16 @@ class OobleckEngine:
     def __init__(self, profile: cm.ModelProfile, nodes: Sequence[str],
                  config: EngineConfig,
                  monitor: Optional[NodeChangeMonitor] = None,
-                 on_checkpoint: Optional[Callable[[], None]] = None):
+                 on_checkpoint: Optional[Callable[[], None]] = None,
+                 topology=None):
         self.profile = profile
         self.config = config
+        self._topology = topology      # runtime.transfer.Topology or None
+        self._topology_auto = topology is None
+        # node placement order for the auto-built topology; joins append
+        # here so late arrivals get real pod slots instead of staying
+        # singleton/DCN forever
+        self._placement_order = list(nodes)
         self.monitor = monitor or NodeChangeMonitor()
         self.monitor.subscribe(self._on_event)
         self.on_checkpoint = on_checkpoint
@@ -155,15 +165,44 @@ class OobleckEngine:
         return hwlib.allreduce_time(last.nbytes / max(len(last.groups), 1), k,
                                     hw=self.profile.hw)
 
+    @property
+    def topology(self):
+        """Pod placement for the recovery data plane (lazy: core must
+        not import runtime at module load)."""
+        if self._topology is None:
+            from repro.runtime.transfer import Topology
+            self._topology = Topology.regular(
+                self._placement_order,
+                nodes_per_pod=self.config.nodes_per_pod,
+                hw=self.profile.hw)
+        return self._topology
+
+    def transfer_plan(self, result: ReconfigResult,
+                      dead: Set[str] = frozenset()):
+        """Schedule ``result``'s copy plan into parallel topology-aware
+        streams (runtime/transfer.py, DESIGN.md §9)."""
+        from repro.runtime.transfer import schedule_transfers
+        return schedule_transfers(result.copy_plan, self.topology, dead=dead)
+
+    def recovery_breakdown(self, result: ReconfigResult,
+                           dead: Set[str] = frozenset()) -> Dict[str, float]:
+        """Failure -> first-step latency decomposition (seconds):
+        replan   — measured reconfigurator wall-clock (a table lookup);
+        transfer — state-copy makespan over parallel streams under link
+                   contention (MAX over streams, not sum of bytes);
+        compile  — zero by the §8 warm-cache contract (programs for every
+                   template are precompiled; swap is a lookup);
+        barrier  — regroup/collective re-formation allowance."""
+        return {"replan": result.replan_seconds,
+                "transfer": self.transfer_plan(result, dead=dead).makespan(),
+                "compile": 0.0,
+                "barrier": 1.0}
+
     def reconfiguration_seconds(self, result: ReconfigResult) -> float:
         """Wall-clock estimate of a reconfiguration: state copy dominates
-        (paper Fig. 11 'copying overhead'); planning is a table lookup."""
-        per_node: Dict[str, int] = {}
-        for t in result.copy_plan:
-            per_node[t.src_node] = per_node.get(t.src_node, 0) + t.nbytes
-            per_node[t.dst_node] = per_node.get(t.dst_node, 0) + t.nbytes
-        worst = max(per_node.values(), default=0)
-        return hwlib.p2p_time(worst, hw=self.profile.hw) + 1.0  # +1s barrier/regroup
+        (paper Fig. 11 'copying overhead') and is charged as the
+        max-over-streams transfer makespan of the scheduled data plane."""
+        return sum(self.recovery_breakdown(result).values())
 
     # ------------------------------------------------------------------
     def _on_event(self, ev: ClusterEvent) -> None:
@@ -243,6 +282,13 @@ class OobleckEngine:
     def handle_join(self, new_nodes: List[str]) -> ReconfigResult:
         pool = list(new_nodes) + [n for n in self.spare_nodes
                                   if n not in set(new_nodes)]
+        # give joiners real pod slots: extend the placement order and
+        # rebuild the auto topology (a user-provided one is their call)
+        seen = set(self._placement_order)
+        fresh = [n for n in pool if n not in seen]
+        if fresh and self._topology_auto:
+            self._placement_order.extend(fresh)
+            self._topology = None
         result = self.reconf.on_join(self.instances, pool)
         self.instances = result.instances
         self.batch = result.batch

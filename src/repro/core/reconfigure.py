@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import time as _time
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core.batch import BatchPlan, distribute_batch
@@ -59,9 +60,13 @@ class PipelineInstance:
 @dataclasses.dataclass(frozen=True)
 class CopyTask:
     layer: int
-    src_node: str
+    src_node: str                  # default pick (least-loaded survivor)
     dst_node: str
     nbytes: int
+    # every surviving replica holding this layer: the data plane
+    # (runtime/transfer.py) re-chooses among these topology-aware —
+    # pod-local/ICI sources beat cross-pod/DCN ones
+    sources: Tuple[str, ...] = ()
 
 
 @dataclasses.dataclass
@@ -79,6 +84,10 @@ class ReconfigResult:
     # covers any count <= N), or a burst-merged pool landing in a gap of
     # a capped template set; spares rejoin on the next reconfiguration
     spare_nodes: List[str] = dataclasses.field(default_factory=list)
+    # wall-clock the reconfigurator spent computing this result (the
+    # "replan" leg of the recovery-latency decomposition; a table
+    # lookup, so microseconds — measured, not assumed)
+    replan_seconds: float = 0.0
 
     def copy_bytes(self) -> int:
         return sum(t.nbytes for t in self.copy_plan)
@@ -111,6 +120,7 @@ class Reconfigurator:
         nodes from an earlier reconfiguration; they enter the recovery
         pool like the survivors of a damaged pipeline, so they rejoin
         service whenever a covering combination exists."""
+        t0 = _time.perf_counter()
         spec = self.spec
         spares = [n for n in spares if n not in dead_nodes]
         survivors: List[List[str]] = [
@@ -228,6 +238,7 @@ class Reconfigurator:
         result.batch = distribute_batch(
             [i.template for i in new_instances], self.global_batch,
             self.microbatch)
+        result.replan_seconds = _time.perf_counter() - t0
         return result
 
     # ------------------------------------------------------------------
@@ -237,6 +248,7 @@ class Reconfigurator:
         use every node — instantiation is a table lookup (§4.2).  Counts
         beyond the original N may not be exactly coverable; the largest
         coverable subset is used and the rest stay as hot spares."""
+        t0 = _time.perf_counter()
         all_nodes = [n for inst in instances for n in inst.nodes]
         all_nodes.extend(new_nodes)
         old_owners = self._ownership(instances)
@@ -256,7 +268,8 @@ class Reconfigurator:
         return ReconfigResult(
             instances=new_instances,
             copy_plan=self._copy_plan(old_owners, new_instances, set()),
-            batch=batch, globally_replanned=True, spare_nodes=spares)
+            batch=batch, globally_replanned=True, spare_nodes=spares,
+            replan_seconds=_time.perf_counter() - t0)
 
     # ------------------------------------------------------------------
     def _decompose_prefix(self, total: int) -> Tuple[List[int], int]:
@@ -337,5 +350,6 @@ class Reconfigurator:
                     src = min(alive_srcs, key=lambda n: load.get(n, 0))
                     nbytes = _layer_state_bytes(self.profile, layer)
                     load[src] = load.get(src, 0) + nbytes
-                    plan.append(CopyTask(layer, src, node, nbytes))
+                    plan.append(CopyTask(layer, src, node, nbytes,
+                                         sources=tuple(sorted(alive_srcs))))
         return plan

@@ -15,7 +15,7 @@ each bucket's all-reduce with the backward of earlier layers.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Sequence, Set, Tuple
 
 from repro.core.reconfigure import PipelineInstance
 
@@ -110,6 +110,15 @@ def build_sync_plan(instances: Sequence[PipelineInstance],
             cur_bytes += nbytes
     flush()
     return buckets
+
+
+def layer_owner_map(instances: Sequence[PipelineInstance]
+                    ) -> Dict[int, Set[str]]:
+    """Layer -> every node holding its state across all replicas: the
+    candidate-source set the recovery data plane (runtime/transfer.py)
+    draws from, and what the copy plan's ``CopyTask.sources`` records."""
+    return {g.layer: {n for rep in g.replicas for n in rep}
+            for g in layer_groups(instances)}
 
 
 def verify_replica_coverage(instances: Sequence[PipelineInstance]) -> bool:

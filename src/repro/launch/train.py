@@ -56,6 +56,9 @@ def main(argv=None) -> dict:
     ap.add_argument("--microbatch", type=int, default=2)
     ap.add_argument("--seq-len", type=int, default=32)
     ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--pods", type=int, default=8,
+                    help="nodes per pod for the recovery data plane "
+                         "(intra-pod copies ride ICI, cross-pod DCN)")
     ap.add_argument("--kill-at", type=int, default=-1,
                     help="inject a node failure before this step")
     ap.add_argument("--join-at", type=int, default=-1)
@@ -82,7 +85,8 @@ def main(argv=None) -> dict:
     nodes = [f"node{i}" for i in range(args.nodes)]
     engine = OobleckEngine(profile, nodes, EngineConfig(
         fault_tolerance=args.f, global_batch=args.global_batch,
-        microbatch=args.microbatch, gpus_per_node=1, n0_override=args.n0))
+        microbatch=args.microbatch, gpus_per_node=1, n0_override=args.n0,
+        nodes_per_pod=args.pods))
     print(f"[plan] templates={list(engine.templates)} "
           f"pipelines={[i.template.num_nodes for i in engine.instances]} "
           f"microbatches={engine.batch.num_microbatches}")
@@ -113,9 +117,13 @@ def main(argv=None) -> dict:
             victim = engine.instances[0].nodes[-1]
             t0 = time.perf_counter()
             info = trainer.recover({victim})
+            xfer = info["transfer"]
             print(f"[fail] killed {victim}: recovered from replicas in "
                   f"{time.perf_counter() - t0:.2f}s "
-                  f"(copied {info['copied_bytes'] / 1e6:.0f}MB of state, "
+                  f"(copied {info['copied_bytes'] / 1e6:.0f}MB of state over "
+                  f"{xfer['streams']} streams, "
+                  f"{xfer['pod_local_fraction']:.0%} pod-local, modeled "
+                  f"transfer {xfer['seconds'] * 1e3:.1f}ms on target hw, "
                   f"program cache: {info['cache']}), "
                   f"pipelines={[i.template.num_nodes for i in engine.instances]}")
         if step == args.join_at:

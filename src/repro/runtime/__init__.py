@@ -7,9 +7,12 @@ from repro.runtime.schedule import (flat_schedule, one_f_one_b,
 from repro.runtime.sharding import ShardingStrategy
 from repro.runtime import spmd
 from repro.runtime.spmd import SPMDExecutor
+from repro.runtime.transfer import (Topology, TransferPlan, TransferPlanError,
+                                    TransferStream, schedule_transfers)
 
 __all__ = ["Executor", "ExecutorUnsupported", "ProgramCache",
            "template_signature", "track_compiles", "track_host_transfers",
            "HeteroTrainer", "split_into_layers", "flat_schedule",
            "one_f_one_b", "simulate_makespan", "ShardingStrategy", "spmd",
-           "SPMDExecutor"]
+           "SPMDExecutor", "Topology", "TransferPlan", "TransferPlanError",
+           "TransferStream", "schedule_transfers"]

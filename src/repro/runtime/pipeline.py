@@ -164,6 +164,14 @@ class HeteroTrainer(Executor):
         self.opt_cfg = opt_cfg
         self.mode = mode
         self.cache = cache or ProgramCache()
+        # fault-injection seam (tests/test_fault_injection.py): called at
+        # the step's phase boundaries — "grads" after each pipeline's
+        # forward/backward, "sync" after the cross-replica gradient
+        # average, BEFORE any state mutation.  A failure raised from
+        # either phase therefore aborts the iteration with every layer
+        # state untouched (the lost-iteration semantics of §3.3); the
+        # optimizer commit is the only mutating phase and runs last.
+        self.on_phase: Optional[Callable[[str], None]] = None
         self.opt_step = jnp.zeros((), jnp.int32)
         layers = split_into_layers(model, params)
         self.num_layers = len(layers)
@@ -180,7 +188,8 @@ class HeteroTrainer(Executor):
 
     # ------------------------------------------------------------------
     def _bind_run(self, inst: PipelineInstance, layers: Optional[List[Dict]],
-                  source_states: Optional[Dict[int, LayerState]] = None
+                  source_states: Optional[Dict[int, LayerState]] = None,
+                  state_fn: Optional[Callable[[str, int], LayerState]] = None
                   ) -> PipelineRun:
         stage_layers = [list(range(st.layer_start, st.layer_end))
                         for st in inst.template.stages]
@@ -189,7 +198,14 @@ class HeteroTrainer(Executor):
             for l in lids:
                 # ALWAYS copy: update programs donate their input
                 # buffers, so replicas must never alias layer state
-                if source_states is not None and l in source_states:
+                if state_fn is not None:
+                    # data-plane path: the state a layer's owning node
+                    # receives comes from the SCHEDULED source replica
+                    src = state_fn(inst.layer_owners(l)[0], l)
+                    states[l] = {"p": jax.tree.map(jnp.copy, src["p"]),
+                                 "m": jax.tree.map(jnp.copy, src["m"]),
+                                 "v": jax.tree.map(jnp.copy, src["v"])}
+                elif source_states is not None and l in source_states:
                     src = source_states[l]
                     states[l] = {"p": jax.tree.map(jnp.copy, src["p"]),
                                  "m": jax.tree.map(jnp.copy, src["m"]),
@@ -320,11 +336,26 @@ class HeteroTrainer(Executor):
             total_mb = (self.engine.config.global_batch
                         // self.engine.config.microbatch)
             mb_counts = range(1, total_mb + 1)
+        mb_counts = list(mb_counts)
         for tpl in self.engine.templates.values():
             sig = template_signature(tpl)
             for M in mb_counts:
                 tok, lab = self._batch_avals(M)
                 self._grads_program(sig, tok, lab)
+        # Warm the eager GLUE around the cached programs too: stacking M
+        # microbatches and reducing the M-length NLL are shape-keyed op
+        # dispatches that would otherwise compile on the first step after
+        # a reconfiguration lands on a previously-unseen microbatch
+        # count — exactly the moment the zero-recompilation contract is
+        # supposed to protect.
+        b = self.engine.config.microbatch
+        s = self.engine.profile.seq_len
+        host = np.zeros((b, s), np.int32)
+        for M in mb_counts:
+            stacked = jnp.stack([jnp.asarray(host)] * M).astype(jnp.int32)
+            nll = jnp.zeros((M,), jnp.float32)
+            (jnp.sum(nll) / float(M)).block_until_ready()
+            del stacked
         self.bind()
         return self.cache.stats.as_dict()
 
@@ -423,6 +454,8 @@ class HeteroTrainer(Executor):
             all_grads.append(g)
             nlls.append(nll)
             weights.append(len(mbs))
+            if self.on_phase is not None:
+                self.on_phase("grads")
 
         # ---- layer-granular cross-replica sync (Figure 9) -------------
         wsum = float(sum(weights))
@@ -434,6 +467,8 @@ class HeteroTrainer(Executor):
             for w, g in contribs[1:]:
                 acc = jax.tree.map(lambda a, t: a + t * w, acc, g)
             synced[l] = acc
+        if self.on_phase is not None:
+            self.on_phase("sync")
 
         # ---- global-norm clip across the WHOLE model -------------------
         # (clipping per layer would diverge from the SPMD fast path);
@@ -468,47 +503,71 @@ class HeteroTrainer(Executor):
         return self.train_step(batches)
 
     # ------------------------------------------------------------------
-    # Failure recovery: copy layer states from surviving replicas
+    # Failure recovery: the data plane copies layer states from the
+    # SCHEDULED surviving replicas (runtime/transfer.py, DESIGN.md §9)
     # ------------------------------------------------------------------
-    def handle_failure(self, dead_nodes: set, drained: bool = False) -> Dict:
-        # Surviving replicas' states, BEFORE reconfiguration: a node's
-        # layer states survive iff the node survives.
-        survivors: Dict[int, LayerState] = {}
+    def _states_by_node(self, exclude: Set[str] = frozenset()
+                        ) -> Dict[str, Dict[int, LayerState]]:
+        """node -> layer -> state, for every surviving owner.  A node's
+        layer states survive iff the node survives; every node of a
+        multi-node stage holds the stage's states."""
+        by_node: Dict[str, Dict[int, LayerState]] = {}
         for run in self.runs:
-            for st_spec, lids in zip(run.instance.template.stages,
-                                     run.stage_layers):
-                node = run.instance.nodes[st_spec.node_offset]
-                if node in dead_nodes:
-                    continue
-                for l in lids:
-                    survivors.setdefault(l, run.states[l])
-        result = self.engine.handle_failure(dead_nodes, drained=drained)
-        missing = [l for l in range(self.num_layers) if l not in survivors]
+            for l, st in run.states.items():
+                for node in run.instance.layer_owners(l):
+                    if node not in exclude:
+                        by_node.setdefault(node, {})[l] = st
+        return by_node
+
+    def _apply_transfer_plan(self, result, by_node: Dict[str, Dict[int, LayerState]],
+                             dead: Set[str]) -> Dict:
+        """Rebind every pipeline, sourcing each moved layer from the
+        replica the transfer scheduler routed it from (pod-local first,
+        least-loaded sender), then swap programs by cache lookup."""
+        # (schedule_transfers already validated the plan against ``dead``
+        # and the copy plan's byte total)
+        plan = self.engine.transfer_plan(result, dead=dead)
+        fallback: Dict[int, LayerState] = {}
+        for node_states in by_node.values():
+            for l, st in node_states.items():
+                fallback.setdefault(l, st)
+        missing = [l for l in range(self.num_layers) if l not in fallback]
         assert not missing, f"layers {missing} lost (>f failures in a stage)"
-        self.runs = [self._bind_run(inst, layers=None,
-                                    source_states=survivors)
+
+        def state_for(node: str, layer: int) -> LayerState:
+            held = by_node.get(node, {})
+            if layer in held:          # the node already owns this layer
+                return held[layer]
+            src = plan.source_of(node, layer)
+            if src is not None and layer in by_node.get(src, {}):
+                return by_node[src][layer]
+            return fallback[layer]
+
+        self.runs = [self._bind_run(inst, layers=None, state_fn=state_for)
                      for inst in self.engine.instances]
         self.bind()        # swap programs by lookup (zero compiles if warm)
+        stats = plan.stats()      # prices the makespan once
         return {"copied_bytes": result.copy_bytes(),
                 "num_pipelines": len(self.runs),
-                "cache": self.cache.stats.as_dict()}
+                "cache": self.cache.stats.as_dict(),
+                "transfer": stats,
+                "breakdown": {"replan": result.replan_seconds,
+                              "transfer": stats["seconds"],
+                              "compile": 0.0}}
+
+    def handle_failure(self, dead_nodes: set, drained: bool = False) -> Dict:
+        dead = set(dead_nodes)
+        by_node = self._states_by_node(exclude=dead)
+        result = self.engine.handle_failure(dead, drained=drained)
+        return self._apply_transfer_plan(result, by_node, dead)
 
     def handle_join(self, new_nodes: list) -> Dict:
         """Elastic scale-up: re-plan globally over the larger cluster and
         seed every new pipeline's layer states from existing replicas
         (the same copy path as failure recovery — §5 applies to joins)."""
-        survivors: Dict[int, LayerState] = {}
-        for run in self.runs:
-            for l, st in run.states.items():
-                survivors.setdefault(l, st)
+        by_node = self._states_by_node()
         result = self.engine.handle_join(list(new_nodes))
-        self.runs = [self._bind_run(inst, layers=None,
-                                    source_states=survivors)
-                     for inst in self.engine.instances]
-        self.bind()
-        return {"copied_bytes": result.copy_bytes(),
-                "num_pipelines": len(self.runs),
-                "cache": self.cache.stats.as_dict()}
+        return self._apply_transfer_plan(result, by_node, set())
 
     def recover(self, dead: Set[str], drained: bool = False) -> Dict:
         return self.handle_failure(set(dead), drained=drained)

@@ -3,8 +3,11 @@
 Three policies reproduce the paper's comparison:
 
   * ``OobleckPolicy`` — wraps the REAL core engine (templates, planner,
-    reconfigurator); downtime on failure = state-copy time from the real
-    copy plan; loses at most the in-flight iteration.
+    reconfigurator); downtime on failure = replan + the state-copy
+    MAKESPAN of the scheduled transfer streams (runtime/transfer.py:
+    max over parallel streams under ICI/DCN contention, not a serial
+    sum of bytes) + a regroup barrier; loses at most the in-flight
+    iteration.
   * ``VarunaPolicy``  — checkpoint + full-restart + job morphing [1]:
     best homogeneous (pp x dp) grid over remaining nodes (leftover nodes
     idle), synchronous checkpoint every k iterations, failure rolls back
@@ -99,16 +102,22 @@ class OobleckPolicy(Policy, Executor):
 
     def __init__(self, profile: cm.ModelProfile, nodes: List[str],
                  f: int, global_batch: int, microbatch: int,
-                 n0: Optional[int] = None, max_stages: Optional[int] = None):
+                 n0: Optional[int] = None, max_stages: Optional[int] = None,
+                 topology=None, nodes_per_pod: int = 8):
         self.profile = profile
         self.stats = PolicyStats()
         self.sim_step = 0
+        #: recovery-latency decomposition of the last failure/join
+        #: (replan / transfer / compile / barrier seconds)
+        self.last_breakdown: Optional[Dict[str, float]] = None
         n0 = n0 or profile.min_nodes(1)
         self.engine = OobleckEngine(
             profile, nodes,
             EngineConfig(fault_tolerance=f, global_batch=global_batch,
                          microbatch=microbatch, gpus_per_node=1,
-                         n0_override=n0, max_stages=max_stages))
+                         n0_override=n0, max_stages=max_stages,
+                         nodes_per_pod=nodes_per_pod),
+            topology=topology)
         self.engine.attach_executor(self)
 
     # Executor interface (simulated time) ------------------------------
@@ -127,6 +136,7 @@ class OobleckPolicy(Policy, Executor):
         seconds = (self.on_drain(set(dead)) if drained
                    else self.on_failure(set(dead)))
         return {"downtime_seconds": seconds,
+                "breakdown": self.last_breakdown,
                 "num_pipelines": len(self.engine.instances)}
 
     def join(self, nodes: List[str]) -> Dict:
@@ -162,8 +172,10 @@ class OobleckPolicy(Policy, Executor):
         active = set(self.engine.nodes)
         dead = dead & (active | set(self.engine.spare_nodes))
         if not dead:                        # e.g. drained nodes already gone
+            self.last_breakdown = None      # no recovery happened
             return 0.0
         if not (dead & active):
+            self.last_breakdown = None
             # only idle spares died: prune them so they are never folded
             # back into a pipeline, but no reconfiguration happens
             self.engine.handle_failure(dead, drained=drained)
@@ -175,7 +187,9 @@ class OobleckPolicy(Policy, Executor):
         except PlanningError as e:          # defensive: stop, don't crash
             raise PolicyStopped(f"oobleck: {e}")
         self.stats.reconfigurations += 1
-        return self.engine.reconfiguration_seconds(result)
+        self.last_breakdown = self.engine.recovery_breakdown(result,
+                                                             dead=dead)
+        return sum(self.last_breakdown.values())
 
     def on_join(self, nodes: List[str]) -> float:
         try:
@@ -183,7 +197,8 @@ class OobleckPolicy(Policy, Executor):
         except PlanningError as e:
             raise PolicyStopped(f"oobleck: {e}")
         self.stats.reconfigurations += 1
-        return self.engine.reconfiguration_seconds(result)
+        self.last_breakdown = self.engine.recovery_breakdown(result)
+        return sum(self.last_breakdown.values())
 
     def num_nodes(self) -> int:
         return len(self.engine.nodes)

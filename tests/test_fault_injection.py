@@ -1,0 +1,314 @@
+"""Fault-injection conformance suite (ISSUE 3): kill nodes mid-step,
+during gradient sync, and during an in-flight checkpoint, across all
+three Executor implementations (HeteroTrainer compiled+eager,
+SPMDExecutor, the simulator's OobleckPolicy).
+
+The contract under test: after any injected failure the engine either
+  * recovers to BIT-IDENTICAL params (vs an unfailed reference run at
+    the same committed step, and across replicas), or
+  * raises InsufficientReplicasError cleanly — params untouched, the
+    exit checkpoint valid —
+and NEVER leaves a corrupt state (partially-updated layers, a
+checkpoint manifest pointing at missing shards, a transfer plan reading
+a dead node)."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.ckpt.checkpoint as ckpt_mod
+from repro.ckpt import CheckpointManager
+from repro.configs import get_arch, reduced
+from repro.core import (EngineConfig, InsufficientReplicasError,
+                        OobleckEngine, build_profile,
+                        verify_replica_coverage)
+from repro.core.monitor import NodeChangeMonitor
+from repro.data import GlobalBatchDispenser, SyntheticLM
+from repro.models import Model
+from repro.optim import adamw
+from repro.runtime import (Executor, ExecutorUnsupported, HeteroTrainer,
+                           SPMDExecutor)
+from repro.sim import OobleckPolicy, PolicyStopped, TraceEvent, run_sim
+
+RNG = jax.random.PRNGKey(21)
+GB, MB, SEQ = 16, 2, 16
+
+
+class NodeKilled(RuntimeError):
+    """Injected mid-step failure."""
+
+
+def make_setup(layers=4, n_nodes=5):
+    arch = reduced(get_arch("gpt3_medium"), layers=layers)
+    model = Model(arch, dtype=jnp.float32, remat=False, attn_impl="naive",
+                  scan_layers=False)
+    params = model.init(RNG)
+    profile = build_profile(arch, microbatch=MB, seq_len=SEQ)
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=0, clip_norm=1.0,
+                                weight_decay=0.0)
+
+    def mk_engine(**kw):
+        return OobleckEngine(
+            profile, [f"n{i}" for i in range(n_nodes)],
+            EngineConfig(fault_tolerance=1, global_batch=GB, microbatch=MB,
+                         gpus_per_node=1, n0_override=2, nodes_per_pod=4),
+            **kw)
+    return arch, model, params, opt_cfg, mk_engine
+
+
+def microbatches(batch, mb_size):
+    n = batch["tokens"].shape[0] // mb_size
+    return [{k: v[i * mb_size:(i + 1) * mb_size] for k, v in batch.items()
+             if not k.startswith("_")} for i in range(n)]
+
+
+def drive(trainer, disp):
+    batches = disp.next_step(trainer.engine.batch.minibatch_sizes())
+    return trainer.train_step([microbatches(b, MB) for b in batches])
+
+
+def assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def assert_params_track(a, b, lr=1e-3):
+    """Tolerance comparison for runs whose batch PARTITIONING differs
+    (same samples, different float association order; Adam turns ULP
+    sign flips into O(lr) moves on isolated elements)."""
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        x, y = np.asarray(x), np.asarray(y)
+        diff = np.abs(x - y)
+        assert diff.max() <= 2.5 * lr, diff.max()
+        assert (diff > lr / 10).mean() < 1e-3, (diff > lr / 10).mean()
+
+
+# ----------------------------------------------------------------------
+# 1. HeteroTrainer: kill mid-step and during gradient sync
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ["compiled", "eager"])
+@pytest.mark.parametrize("phase", ["grads", "sync"])
+def test_hetero_kill_recovers_bit_identical(mode, phase):
+    """A failure raised while gradients are being computed ("grads") or
+    during the cross-replica sync ("sync") aborts the iteration with NO
+    state mutation: post-recovery params are bit-identical to the
+    unfailed reference at the same committed step, the lost iteration is
+    retried on the SAME samples, and replicas never diverge."""
+    arch, model, params, opt_cfg, mk_engine = make_setup()
+    ref = HeteroTrainer(model, mk_engine(), params, opt_cfg, mode=mode)
+    vic = HeteroTrainer(model, mk_engine(), params, opt_cfg, mode=mode)
+    src = SyntheticLM(arch.vocab_size, SEQ, seed=13)
+    dr, dv = GlobalBatchDispenser(src), GlobalBatchDispenser(src)
+
+    for _ in range(2):
+        drive(ref, dr), drive(vic, dv)
+    committed = ref.full_params()
+
+    victim = vic.engine.instances[0].nodes[-1]
+
+    def inject(p):
+        if p == phase:
+            raise NodeKilled(victim)
+    vic.on_phase = inject
+    with pytest.raises(NodeKilled):
+        drive(vic, dv)
+    vic.on_phase = None
+    dv.rewind(GB)                       # the in-flight iteration is lost
+    info = vic.recover({victim})
+
+    # --- the acceptance bit: recovery == surviving replicas, exactly ---
+    assert_trees_equal(vic.full_params(), committed)
+    assert vic.replica_divergence() == 0.0
+    assert info["transfer"]["bytes"] >= 0
+    assert verify_replica_coverage(vic.engine.instances)
+
+    # retried iteration consumes the SAME samples (repartitioned), and
+    # both runs keep tracking
+    out_v = drive(vic, dv)
+    out_r = drive(ref, dr)
+    assert dv.state() == dr.state()
+    assert abs(float(out_v["loss"]) - float(out_r["loss"])) < 1e-4
+    assert_params_track(vic.full_params(), ref.full_params())
+    assert vic.replica_divergence() == 0.0
+
+
+def test_hetero_kill_during_inflight_checkpoint(tmp_path):
+    """Failure + recovery while an async checkpoint save is mid-flight:
+    the save must complete bit-exact (GC pinning), and recovery must not
+    be perturbed by the concurrent writer."""
+    arch, model, params, opt_cfg, mk_engine = make_setup()
+    trainer = HeteroTrainer(model, mk_engine(), params, opt_cfg,
+                            mode="eager")
+    src = SyntheticLM(arch.vocab_size, SEQ, seed=17)
+    disp = GlobalBatchDispenser(src)
+    drive(trainer, disp)
+    mgr = CheckpointManager(str(tmp_path), num_layers=arch.num_layers,
+                            async_mode=True, keep=1)
+
+    stalled, resume = threading.Event(), threading.Event()
+    orig = ckpt_mod._save_manifest
+
+    def stalling(path, meta):
+        stalled.set()
+        resume.wait(timeout=30)
+        orig(path, meta)
+    ckpt_mod._save_manifest = stalling
+    try:
+        snap = trainer.snapshot(disp.state(), 0)
+        mgr.save(snap)                  # async, stalls before the manifest
+        assert stalled.wait(timeout=30)
+        victim = trainer.engine.instances[0].nodes[-1]
+        trainer.recover({victim})       # failure lands mid-checkpoint
+        assert trainer.replica_divergence() == 0.0
+        assert_trees_equal(trainer.full_params(), snap.params)
+        drive(trainer, disp)            # training continues immediately
+    finally:
+        ckpt_mod._save_manifest = orig
+        resume.set()
+    mgr.wait()
+    steps = mgr.list_steps()
+    assert steps == [snap.step]
+    assert mgr.verify(snap.step), "in-flight checkpoint ended up corrupt"
+    restored = mgr.restore(snap.params, snap.opt_state)
+    assert_trees_equal(restored.params, snap.params)
+
+
+def test_hetero_below_floor_raises_cleanly_with_valid_checkpoint(tmp_path):
+    """Killing below (f+1)*n0 must raise InsufficientReplicasError with
+    params untouched and the §3.4 exit checkpoint valid + restorable."""
+    arch, model, params, opt_cfg, mk_engine = make_setup(n_nodes=5)
+    mgr = CheckpointManager(str(tmp_path), num_layers=arch.num_layers,
+                            async_mode=False)
+    holder = {}
+    engine = mk_engine(on_checkpoint=lambda: mgr.save(
+        holder["t"].snapshot(holder["d"].state(), 0), block=True))
+    trainer = HeteroTrainer(model, engine, params, opt_cfg, mode="eager")
+    src = SyntheticLM(arch.vocab_size, SEQ, seed=19)
+    disp = GlobalBatchDispenser(src)
+    holder["t"], holder["d"] = trainer, disp
+    drive(trainer, disp)
+    before = trainer.full_params()
+
+    # 5 nodes, f=1, n0=2: one failure is fine, the second goes below floor
+    trainer.recover({engine.instances[0].nodes[-1]})
+    assert_trees_equal(trainer.full_params(), before)
+    with pytest.raises(InsufficientReplicasError):
+        trainer.recover({engine.instances[0].nodes[-1]})
+    assert engine.stopped
+    # params survived the failed transition bit-exact
+    assert_trees_equal(trainer.full_params(), before)
+    assert trainer.replica_divergence() == 0.0
+    # the exit checkpoint is complete, verifiable, and restores bit-exact
+    steps = mgr.list_steps()
+    assert len(steps) == 1
+    assert mgr.verify(steps[0])
+    restored = mgr.restore(before, adamw.init(before))
+    assert_trees_equal(restored.params, before)
+
+
+# ----------------------------------------------------------------------
+# 2. SPMDExecutor: failure degrades to a HeteroTrainer rebind
+# ----------------------------------------------------------------------
+def test_spmd_kill_rebinds_hetero_bit_identical():
+    """The single-program SPMD fast path cannot reconfigure in place; its
+    conformance contract is: refuse (ExecutorUnsupported), keep the
+    engine's PLAN consistent, and let the caller rebind a HeteroTrainer
+    from snapshot() with params bit-identical."""
+    arch, model, params, opt_cfg, mk_engine = make_setup(layers=2)
+    engine = mk_engine()
+    ex = SPMDExecutor(model, params, opt_cfg, engine=engine)
+    assert isinstance(ex, Executor)
+    src = SyntheticLM(arch.vocab_size, SEQ, seed=23)
+    batch = src.batch(np.arange(8))
+    ex.step(batch)
+    with pytest.raises(ExecutorUnsupported):
+        ex.recover({engine.instances[0].nodes[-1]})
+
+    # the monitor path swallows ExecutorUnsupported and replans
+    victim = engine.instances[0].nodes[-1]
+    engine.monitor.inject(NodeChangeMonitor.FAIL, [victim])
+    engine.monitor.poll(now=0.0)
+    assert victim not in engine.nodes
+    assert verify_replica_coverage(engine.instances)
+
+    snap = ex.snapshot()
+    rebound = HeteroTrainer(model, engine, snap.params, opt_cfg,
+                            mode="eager")
+    assert_trees_equal(rebound.full_params(), snap.params)
+    assert rebound.replica_divergence() == 0.0
+    disp = GlobalBatchDispenser(src)
+    out = drive(rebound, disp)
+    assert np.isfinite(float(out["loss"]))
+
+
+# ----------------------------------------------------------------------
+# 3. Simulator policy: same contract at plan level
+# ----------------------------------------------------------------------
+def _sim_profile():
+    import dataclasses as dc
+    arch = dc.replace(get_arch("gpt2"), name="gpt2_L18", num_layers=18)
+    return build_profile(arch, microbatch=2, seq_len=256)
+
+
+def test_policy_kill_midstep_accounting_and_coverage():
+    """A failure landing INSIDE a simulated iteration: the partial
+    iteration is charged to fallback (never committed), downtime is the
+    data-plane breakdown, and coverage is restored."""
+    prof = _sim_profile()
+    nodes = [f"n{i}" for i in range(12)]
+    pol = OobleckPolicy(prof, nodes, f=1, global_batch=256, microbatch=2,
+                        n0=4, nodes_per_pod=4)
+    assert isinstance(pol, Executor)
+    it = pol.iteration_time()
+    events = [TraceEvent(2.5 * it, "fail", (nodes[-1],))]  # mid-iteration 3
+    res = run_sim(pol, events, horizon=20 * it, global_batch=256)
+    assert res.stopped_reason is None
+    assert res.breakdown["fallback"] > 0.0
+    assert res.breakdown["downtime"] > 0.0
+    assert pol.engine.metrics.lost_iterations == 1
+    assert verify_replica_coverage(pol.engine.instances)
+    assert sum(pol.engine.batch.num_microbatches) * 2 == 256
+    bd = pol.last_breakdown
+    assert bd is not None and bd["transfer"] >= 0.0 and bd["compile"] == 0.0
+
+
+def test_policy_below_floor_stops_cleanly_and_checkpoints():
+    prof = _sim_profile()
+    hits = []
+    pol = OobleckPolicy(prof, [f"n{i}" for i in range(9)], f=1,
+                        global_batch=256, microbatch=2, n0=4)
+    pol.engine.on_checkpoint = lambda: hits.append(pol.snapshot())
+    with pytest.raises(PolicyStopped):
+        pol.on_failure(set(list(pol.engine.nodes)[:3]))  # 6 < (f+1)*n0=8
+    assert pol.engine.stopped
+    assert len(hits) == 1 and hits[0]["instances"]
+
+
+# ----------------------------------------------------------------------
+# 4. Interface conformance across all three implementations
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("kind", ["hetero", "spmd", "sim"])
+def test_executor_interface_conformance(kind):
+    arch, model, params, opt_cfg, mk_engine = make_setup(layers=2)
+    if kind == "hetero":
+        ex = HeteroTrainer(model, mk_engine(), params, opt_cfg,
+                           mode="eager")
+    elif kind == "spmd":
+        ex = SPMDExecutor(model, params, opt_cfg, engine=mk_engine())
+    else:
+        ex = OobleckPolicy(_sim_profile(), [f"n{i}" for i in range(10)],
+                           f=1, global_batch=256, microbatch=2, n0=4)
+    assert isinstance(ex, Executor)
+    for method in ("bind", "step", "recover", "join", "snapshot"):
+        assert callable(getattr(ex, method))
+    victim = ex.engine.instances[0].nodes[-1]
+    if kind == "spmd":
+        with pytest.raises(ExecutorUnsupported):
+            ex.recover({victim})
+    else:
+        out = ex.recover({victim})
+        assert isinstance(out, dict)
+        assert victim not in ex.engine.nodes
+        assert verify_replica_coverage(ex.engine.instances)

@@ -1,0 +1,95 @@
+"""Hypothesis properties of the recovery data plane: for random clusters,
+pod layouts and failure sets of size <= f, the scheduled transfer plan
+restores full replica coverage, never reads a failed node, and routes
+every stream consistently with pod placement."""
+import dataclasses
+
+import pytest
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_arch
+from repro.core import (EngineConfig, InsufficientReplicasError,
+                        OobleckEngine, build_profile)
+from repro.core.sync import layer_owner_map, verify_replica_coverage
+
+
+@pytest.fixture(scope="module")
+def profile():
+    arch = dataclasses.replace(get_arch("gpt2"), name="gpt2_L18",
+                               num_layers=18)
+    return build_profile(arch, microbatch=2, seq_len=256)
+
+
+def _engine(profile, n_nodes, f, n0, nodes_per_pod):
+    return OobleckEngine(
+        profile, [f"node{i:03d}" for i in range(n_nodes)],
+        EngineConfig(fault_tolerance=f, global_batch=256, microbatch=2,
+                     gpus_per_node=1, n0_override=n0,
+                     nodes_per_pod=nodes_per_pod))
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_random_failure_sets_keep_the_data_plane_contract(data, profile):
+    f = data.draw(st.integers(1, 2), label="f")
+    n0 = data.draw(st.integers(2, 4), label="n0")
+    # enough headroom that ANY failure set of size <= f stays recoverable
+    n_nodes = data.draw(
+        st.integers((f + 1) * n0 + f, (f + 1) * n0 + f + 8), label="N")
+    pods = data.draw(st.integers(1, 8), label="nodes_per_pod")
+    eng = _engine(profile, n_nodes, f, n0, pods)
+
+    k = data.draw(st.integers(1, f), label="k")
+    dead = set(data.draw(
+        st.lists(st.sampled_from(sorted(eng.nodes)), min_size=k, max_size=k,
+                 unique=True), label="dead"))
+
+    owners_before = layer_owner_map(eng.instances)
+    result = eng.handle_failure(dead)
+    plan = eng.transfer_plan(result, dead=dead)
+
+    # 1. full replica coverage restored
+    assert verify_replica_coverage(eng.instances)
+    owners_after = layer_owner_map(eng.instances)
+    assert all(owners_after[l] for l in owners_after)
+    assert not any(owners_after[l] & dead for l in owners_after)
+
+    # 2. no stream reads a failed node, and every source actually held
+    #    the layer before the failure
+    for s in plan.streams:
+        assert s.src not in dead
+        for t in s.tasks:
+            assert s.src in owners_before[t.layer] - dead
+
+    # 3. route consistency with pod placement + nothing dropped
+    plan.validate(dead, expected_bytes=result.copy_bytes())
+    topo = eng.topology
+    for s in plan.streams:
+        assert s.link == topo.link_kind(s.src, s.dst)
+
+    # 4. accounting: max-over-streams can never exceed the serial sum
+    assert plan.makespan() <= plan.serial_seconds() + 1e-9
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), pods=st.integers(1, 8))
+def test_repeated_failures_until_floor_never_break_the_contract(
+        seed, pods, profile):
+    """Drive failures one node at a time (f=1) until the fault-tolerance
+    floor: every intermediate plan must obey the contract; the terminal
+    event must raise InsufficientReplicasError, never corrupt."""
+    import random
+    rng = random.Random(seed)
+    eng = _engine(profile, 12, f=1, n0=3, nodes_per_pod=pods)
+    while True:
+        victim = rng.choice(sorted(eng.nodes))
+        if len(eng.nodes) - 1 < (eng.spec.f + 1) * eng.spec.n0:
+            with pytest.raises(InsufficientReplicasError):
+                eng.handle_failure({victim})
+            break
+        result = eng.handle_failure({victim})
+        plan = eng.transfer_plan(result, dead={victim})
+        plan.validate({victim}, expected_bytes=result.copy_bytes())
+        assert verify_replica_coverage(eng.instances)
+        assert victim not in eng.nodes
