@@ -13,6 +13,9 @@ Emits ``name,us_per_call,derived`` CSV rows:
   recovery_latency   — failure->first-step decomposition through the
                        recovery data plane (replan / transfer / compile),
                        pod-local vs cross-pod stream makespans
+  sync_throughput    — compiled bucketed gradient-sync data plane vs the
+                       eager per-layer tail (sync + clip + AdamW), plus
+                       the shared per-bucket overlap cost model
 """
 from __future__ import annotations
 
@@ -25,8 +28,9 @@ from benchmarks.common import Csv
 def main() -> None:
     from benchmarks import (fig10_spot_traces, fig11_breakdown,
                             planning_scale, recovery_latency,
-                            roofline_report, step_time, table2_throughput,
-                            table3_planning, table4_ckpt_ablation)
+                            roofline_report, step_time, sync_throughput,
+                            table2_throughput, table3_planning,
+                            table4_ckpt_ablation)
     only = sys.argv[1] if len(sys.argv) > 1 else None
     suites = {
         "table2": table2_throughput.main,
@@ -38,6 +42,7 @@ def main() -> None:
         "planning_scale": planning_scale.main,
         "step_time": step_time.main,
         "recovery_latency": recovery_latency.main,
+        "sync_throughput": sync_throughput.main,
     }
     if only is not None and only not in suites:
         print(f"unknown suite {only!r}; choose from: {', '.join(suites)}",

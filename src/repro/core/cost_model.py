@@ -88,6 +88,12 @@ class ModelProfile:
         comm = 2.0 * hwlib.allreduce_time(l.tp_collective_bytes, d, hw=self.hw)
         return max(compute, memory) + comm
 
+    def layer_bwd_seconds(self, d: int = 1) -> List[float]:
+        """Per-layer backward time on ``d`` chips, layer order — the
+        hiding budget the shared sync cost model (core/sync.py
+        SyncCostModel) overlaps bucket reductions against."""
+        return [self.bwd_time(l, d) for l in range(self.num_layers)]
+
     def stage_fwd(self, u: int, v: int, d: int) -> float:
         return sum(self.fwd_time(i, d) for i in range(u, v))
 

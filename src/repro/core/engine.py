@@ -36,10 +36,10 @@ from repro.core.planner import PipelinePlanner, estimate_iteration_time
 from repro.core.reconfigure import (InsufficientReplicasError,
                                     PipelineInstance, ReconfigResult,
                                     Reconfigurator)
+from repro.core import sync as cm_sync
 from repro.core.sync import SyncBucket, build_sync_plan
 from repro.core.templates import (NodeSpec, PipelineTemplate,
                                   generate_node_spec)
-from repro.utils import hw as hwlib
 
 
 @dataclasses.dataclass
@@ -55,6 +55,10 @@ class EngineConfig:
     # pod size for the default recovery-data-plane topology (DESIGN.md
     # §9): consecutive nodes share a pod/ICI; pods talk over DCN
     nodes_per_pod: int = 8
+    # wire codec for cross-replica gradient sync (runtime/compression
+    # .py): priced by the shared sync cost model AND executed by the
+    # bucketed data plane, so modeled and real wire bytes agree
+    codec: str = "none"
 
 
 @dataclasses.dataclass
@@ -154,16 +158,30 @@ class OobleckEngine:
     def throughput(self) -> float:
         return self.config.global_batch / self.iteration_time()
 
+    def sync_cost_model(self) -> cm_sync.SyncCostModel:
+        """THE pricing of cross-replica gradient sync — shared with the
+        simulator policy and the benchmarks (DESIGN.md §10), pricing
+        ICI vs DCN legs from the topology and wire bytes from the
+        codec, per bucket."""
+        return cm_sync.SyncCostModel(hw=self.profile.hw,
+                                     codec=self.config.codec,
+                                     topology=self.topology)
+
     def _sync_tail_seconds(self) -> float:
-        """Non-overlappable part of cross-pipeline grad sync: the last
-        bucket's all-reduce (everything earlier hides in backward)."""
-        plan = self.sync_plan()
-        if not plan or len(self.instances) <= 1:
+        """Cross-pipeline grad sync NOT hidden behind backward, per the
+        shared per-bucket overlap model: buckets issue deepest-first
+        and overlap the remaining backward; whatever the last bucket
+        spills past the end of backward is exposed."""
+        if len(self.instances) <= 1:
             return 0.0
-        last = plan[-1]
-        k = max(len(g) for g in last.groups)
-        return hwlib.allreduce_time(last.nbytes / max(len(last.groups), 1), k,
-                                    hw=self.profile.hw)
+        return self.sync_cost_model().tail_seconds(
+            self.sync_plan(), self.profile.layer_bwd_seconds())
+
+    def sync_schedule(self) -> List[cm_sync.BucketCostRow]:
+        """Per-bucket overlapped sync schedule for the current instance
+        set (benchmark/report surface of the shared model)."""
+        return self.sync_cost_model().schedule(
+            self.sync_plan(), self.profile.layer_bwd_seconds())
 
     @property
     def topology(self):

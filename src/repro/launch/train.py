@@ -64,6 +64,11 @@ def main(argv=None) -> dict:
     ap.add_argument("--join-at", type=int, default=-1)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--codec", default="none",
+                    choices=["none", "bf16", "int8"],
+                    help="wire codec for cross-replica gradient sync "
+                         "(bucketed data plane, with per-bucket error "
+                         "feedback; 'none' is bitwise-exact)")
     ap.add_argument("--eager", action="store_true",
                     help="use the eager reference path instead of the "
                          "compiled per-template program cache")
@@ -73,6 +78,12 @@ def main(argv=None) -> dict:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    if args.eager and args.codec != "none":
+        # the eager per-layer oracle has no wire codec; keep the engine's
+        # pricing and the [sync] report consistent with what actually runs
+        print(f"[sync] --eager ignores --codec {args.codec}: the per-layer "
+              f"reference path syncs uncompressed")
+        args.codec = "none"
     arch = get_arch(args.arch)
     if not args.full:
         arch = reduced(arch, layers=args.layers)
@@ -86,14 +97,20 @@ def main(argv=None) -> dict:
     engine = OobleckEngine(profile, nodes, EngineConfig(
         fault_tolerance=args.f, global_batch=args.global_batch,
         microbatch=args.microbatch, gpus_per_node=1, n0_override=args.n0,
-        nodes_per_pod=args.pods))
+        nodes_per_pod=args.pods, codec=args.codec))
     print(f"[plan] templates={list(engine.templates)} "
           f"pipelines={[i.template.num_nodes for i in engine.instances]} "
           f"microbatches={engine.batch.num_microbatches}")
+    sched = engine.sync_schedule()
+    print(f"[sync] {len(sched)} buckets, codec={args.codec}, "
+          f"wire={sum(r.wire_bytes for r in sched) / 1e6:.1f}MB, "
+          f"modeled exposed tail {engine._sync_tail_seconds() * 1e3:.2f}ms "
+          f"on target hw")
 
     opt_cfg = adamw.AdamWConfig(lr=3e-3, warmup_steps=0, weight_decay=0.0)
     trainer = HeteroTrainer(model, engine, params, opt_cfg,
-                            mode="eager" if args.eager else "compiled")
+                            mode="eager" if args.eager else "compiled",
+                            codec=args.codec)
     if not args.eager and not args.no_warm:
         t0 = time.perf_counter()
         stats = trainer.warm_templates()

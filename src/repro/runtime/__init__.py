@@ -1,18 +1,23 @@
 from repro.runtime.executor import (Executor, ExecutorUnsupported,
                                     ProgramCache, template_signature,
-                                    track_compiles, track_host_transfers)
+                                    track_compiles, track_host_transfers,
+                                    tree_spec)
 from repro.runtime.pipeline import HeteroTrainer, split_into_layers
 from repro.runtime.schedule import (flat_schedule, one_f_one_b,
                                     simulate_makespan)
 from repro.runtime.sharding import ShardingStrategy
 from repro.runtime import spmd
 from repro.runtime.spmd import SPMDExecutor
+from repro.runtime.sync_exec import (BucketedSync, BucketExec,
+                                     perlayer_global_sumsq, perlayer_sync)
 from repro.runtime.transfer import (Topology, TransferPlan, TransferPlanError,
                                     TransferStream, schedule_transfers)
 
 __all__ = ["Executor", "ExecutorUnsupported", "ProgramCache",
            "template_signature", "track_compiles", "track_host_transfers",
-           "HeteroTrainer", "split_into_layers", "flat_schedule",
-           "one_f_one_b", "simulate_makespan", "ShardingStrategy", "spmd",
-           "SPMDExecutor", "Topology", "TransferPlan", "TransferPlanError",
+           "tree_spec", "HeteroTrainer", "split_into_layers",
+           "flat_schedule", "one_f_one_b", "simulate_makespan",
+           "ShardingStrategy", "spmd", "SPMDExecutor", "BucketedSync",
+           "BucketExec", "perlayer_global_sumsq", "perlayer_sync",
+           "Topology", "TransferPlan", "TransferPlanError",
            "TransferStream", "schedule_transfers"]

@@ -6,20 +6,33 @@ Oobleck-at-scale benefits from compressing buckets before the all-reduce.
 Two codecs:
 
   * ``bf16``  — cast fp32 grads to bf16 (2x, error ~1e-3 relative);
-  * ``int8``  — per-bucket symmetric quantization with an fp32 scale
-    (4x, stochastic-rounding-free deterministic variant).
+  * ``int8``  — symmetric quantization with an fp32 scale (4x,
+    stochastic-rounding-free deterministic variant).
 
-Both are used with error feedback (the residual is carried and added to
-the next step's gradient), which keeps convergence unbiased in
-expectation; tests verify the codec roundtrip error bound and that error
-feedback sums to the true gradient over time.
+The compiled data plane (runtime/sync_exec.py) flattens each sync bucket
+into ONE contiguous buffer before encoding, so the wire format is
+``encode_flat``/``decode_flat``: int8 carries exactly one scale per
+bucket — `core.sync.flat_wire_bytes` is the single source of truth for
+the byte accounting and tests assert the encoded output matches it.
+The tree-shaped ``compress``/``decompress`` (one scale per leaf) remain
+for unbucketed use.
+
+Both codecs are used with error feedback (the residual is carried and
+added to the next step's gradient), which keeps convergence unbiased in
+expectation.  Residuals are keyed by bucket signature: a reconfiguration
+changes the bucket layout, and a residual carried across that boundary
+would shape-mismatch the new buckets — ``ErrorFeedback.retain`` drops
+stale keys on recover/join, and keyed ``apply`` drops a residual whose
+structure no longer matches its gradient.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Dict, Hashable, Iterable, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.sync import CODEC_WIRE, flat_wire_bytes  # noqa: F401 (re-export)
 
 
 def compress(tree: Any, codec: str) -> Any:
@@ -53,25 +66,128 @@ def roundtrip(tree: Any, codec: str) -> Any:
     return decompress(compress(tree, codec), codec)
 
 
+# ----------------------------------------------------------------------
+# Flat-bucket wire format (what the compiled data plane actually sends)
+# ----------------------------------------------------------------------
+def encode_flat(flat: jax.Array, codec: str) -> Any:
+    """Encode ONE flattened fp32 bucket buffer.  int8 uses a single
+    per-bucket scale, so the encoded size is exactly
+    ``flat_wire_bytes(flat.size, codec)``."""
+    if codec == "none":
+        return flat
+    if codec == "bf16":
+        return flat.astype(jnp.bfloat16)
+    if codec == "int8":
+        scale = jnp.maximum(jnp.max(jnp.abs(flat)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+        return {"q": q, "scale": scale.astype(jnp.float32)}
+    raise ValueError(f"unknown codec {codec!r}")
+
+
+def decode_flat(enc: Any, codec: str) -> jax.Array:
+    if codec == "none":
+        return enc
+    if codec == "bf16":
+        return enc.astype(jnp.float32)
+    if codec == "int8":
+        return enc["q"].astype(jnp.float32) * enc["scale"]
+    raise ValueError(f"unknown codec {codec!r}")
+
+
+def roundtrip_flat(flat: jax.Array, codec: str) -> jax.Array:
+    return decode_flat(encode_flat(flat, codec), codec)
+
+
+def encoded_nbytes(enc: Any, codec: str) -> int:
+    """Actual byte count of an encoded bucket/tree (for the tests that
+    pin wire accounting to reality)."""
+    if codec == "int8":
+        total = 0
+        for d in jax.tree.leaves(enc, is_leaf=lambda x: isinstance(x, dict)
+                                 and "q" in x):
+            total += d["q"].size * d["q"].dtype.itemsize
+            total += jnp.asarray(d["scale"]).dtype.itemsize
+        return total
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(enc))
+
+
 class ErrorFeedback:
-    """Carries the compression residual into the next step's gradient."""
+    """Carries the compression residual into the next step's gradient.
+
+    Residuals are keyed: the sync data plane keys them by (bucket
+    signature, replica), so a reconfiguration that changes the bucket
+    layout never replays a stale residual into mismatched shapes —
+    ``retain`` drops keys the new layout cannot use, and ``apply``
+    defensively discards a keyed residual whose structure no longer
+    matches the gradient it would be added to.  The legacy single-tree
+    usage (``apply`` without a key) still works.
+    """
+
+    _LEGACY = ("__legacy__",)
 
     def __init__(self, codec: str):
         self.codec = codec
-        self.residual: Optional[Any] = None
+        self.residuals: Dict[Hashable, Any] = {}
 
-    def apply(self, grads: Any) -> Any:
+    # -- legacy single-tree view ---------------------------------------
+    @property
+    def residual(self) -> Optional[Any]:
+        return self.residuals.get(self._LEGACY)
+
+    @residual.setter
+    def residual(self, value: Optional[Any]) -> None:
+        if value is None:
+            self.residuals.pop(self._LEGACY, None)
+        else:
+            self.residuals[self._LEGACY] = value
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _compatible(res: Any, grads: Any) -> bool:
+        try:
+            if (jax.tree.structure(res) != jax.tree.structure(grads)):
+                return False
+            return all(r.shape == g.shape for r, g in
+                       zip(jax.tree.leaves(res), jax.tree.leaves(grads)))
+        except Exception:
+            return False
+
+    def apply(self, grads: Any, key: Hashable = None) -> Any:
+        """grads -> what goes on the wire; the residual (what the codec
+        lost) is carried into the next call under the same key."""
         if self.codec == "none":
             return grads
-        if self.residual is not None:
-            grads = jax.tree.map(jnp.add, grads, self.residual)
+        key = self._LEGACY if key is None else key
+        res = self.residuals.get(key)
+        if res is not None and not self._compatible(res, grads):
+            res = None                  # stale layout: drop, don't crash
+        if res is not None:
+            grads = jax.tree.map(jnp.add, grads, res)
         sent = roundtrip(grads, self.codec)
-        self.residual = jax.tree.map(jnp.subtract, grads, sent)
+        self.residuals[key] = jax.tree.map(jnp.subtract, grads, sent)
         return sent
+
+    # -- keyed store used by the compiled data plane -------------------
+    def get(self, key: Hashable) -> Optional[Any]:
+        return self.residuals.get(key)
+
+    def put(self, key: Hashable, res: Any) -> None:
+        self.residuals[key] = res
+
+    def retain(self, keys: Iterable[Hashable]) -> int:
+        """Keep only ``keys`` (plus the legacy slot); returns how many
+        stale residuals were dropped — called on recover/join."""
+        keep = set(keys) | {self._LEGACY}
+        stale = [k for k in self.residuals if k not in keep]
+        for k in stale:
+            del self.residuals[k]
+        return len(stale)
 
 
 def wire_bytes(tree: Any, codec: str) -> int:
-    """Bytes on the wire for one bucket under the codec."""
+    """Bytes on the wire for a TREE-shaped payload (one scale per leaf
+    under int8).  Flattened buckets use `flat_wire_bytes` instead —
+    one scale per bucket."""
     leaves = jax.tree.leaves(tree)
     n = sum(l.size for l in leaves)
     return {"none": 4 * n, "bf16": 2 * n, "int8": n + 4 * len(leaves)}[codec]

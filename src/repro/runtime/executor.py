@@ -49,6 +49,14 @@ def avals_of(tree):
         lambda t: jax.ShapeDtypeStruct(t.shape, t.dtype), tree)
 
 
+def tree_spec(tree) -> Tuple:
+    """Hashable (path, shape, dtype) spec of a pytree of arrays/avals —
+    the shape component of every ProgramCache key."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return tuple((jax.tree_util.keystr(path), tuple(leaf.shape),
+                  str(jax.numpy.dtype(leaf.dtype))) for path, leaf in flat)
+
+
 # ----------------------------------------------------------------------
 # Template signatures
 # ----------------------------------------------------------------------

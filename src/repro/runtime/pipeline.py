@@ -16,10 +16,15 @@ the paper's unit of state).  A training step:
      design;
   2. cross-pipeline sync at LAYER granularity (Figure 9): a weighted
      average over replicas, weights = minibatch sizes, so the result is
-     exactly the global-batch mean gradient;
-  3. identical AdamW update on every replica of every layer through a
-     compiled, DONATED update program — replicas stay bit-identical,
-     which is what makes step 4 sound;
+     exactly the global-batch mean gradient.  Compiled mode executes
+     the engine's BUCKET plan through the sync data plane
+     (runtime/sync_exec.py, DESIGN.md §10): each bucket flattened to
+     one buffer, reduced deepest-first, hierarchically across pods,
+     optionally codec-compressed with error feedback;
+  3. identical AdamW update on every replica through compiled, DONATED
+     update programs (per BUCKET in compiled mode, per layer on the
+     eager oracle path) — replicas stay bit-identical, which is what
+     makes step 4 sound;
   4. on failure: the core engine reinstantiates pipelines from templates
      and emits a copy plan; we rebuild stage arrays by copying layer
      states (params AND moments) from surviving replicas — recovery
@@ -51,8 +56,10 @@ from repro.models.layers import cross_entropy, embed, unembed
 from repro.optim import adamw
 from repro.runtime.executor import (Executor, ProgramCache,
                                     avals_of as _avals_of,
-                                    template_signature)
+                                    template_signature, tree_spec)
 from repro.runtime.schedule import flat_schedule
+from repro.runtime.sync_exec import (BucketedSync, perlayer_global_sumsq,
+                                     perlayer_sync)
 
 LayerState = Dict[str, Any]     # {"p": params, "m": moment1, "v": moment2}
 
@@ -83,11 +90,8 @@ def zeros_like_tree(tree):
     return jax.tree.map(lambda t: jnp.zeros_like(t, dtype=jnp.float32), tree)
 
 
-def _tree_spec(tree) -> Tuple:
-    """Hashable (path, shape, dtype) spec of a pytree of arrays/avals."""
-    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
-    return tuple((jax.tree_util.keystr(path), tuple(leaf.shape),
-                  str(jnp.dtype(leaf.dtype))) for path, leaf in flat)
+# shared with the sync data plane's program keys (runtime/executor.py)
+_tree_spec = tree_spec
 
 
 # ----------------------------------------------------------------------
@@ -157,13 +161,26 @@ class HeteroTrainer(Executor):
     def __init__(self, model: Model, engine: OobleckEngine,
                  params: Dict, opt_cfg: adamw.AdamWConfig,
                  mode: str = "compiled",
-                 cache: Optional[ProgramCache] = None):
+                 cache: Optional[ProgramCache] = None,
+                 codec: str = "none",
+                 sync_mode: Optional[str] = None):
         assert mode in ("compiled", "eager"), mode
         self.model = model
         self.engine = engine
         self.opt_cfg = opt_cfg
         self.mode = mode
         self.cache = cache or ProgramCache()
+        # Sync tail implementation (DESIGN.md §10): "bucketed" executes
+        # the engine's sync plan through compiled per-bucket programs;
+        # "perlayer" keeps the eager jax.tree.map chain as the parity
+        # oracle.  Compiled mode defaults to bucketed; eager mode stays
+        # the end-to-end reference on the per-layer path.
+        self.sync_mode = sync_mode or (
+            "bucketed" if mode == "compiled" else "perlayer")
+        assert self.sync_mode in ("bucketed", "perlayer"), self.sync_mode
+        assert codec == "none" or self.sync_mode == "bucketed", \
+            "wire codecs ride the bucketed data plane only"
+        self.codec = codec
         # fault-injection seam (tests/test_fault_injection.py): called at
         # the step's phase boundaries — "grads" after each pipeline's
         # forward/backward, "sync" after the cross-replica gradient
@@ -180,6 +197,9 @@ class HeteroTrainer(Executor):
         # shape/dtype skeleton of every layer: lets warm() compile
         # programs for templates that are not currently instantiated
         self._layer_avals = [_avals_of(l) for l in layers]
+        self._bsync = BucketedSync(self.cache, opt_cfg, self._layer_avals,
+                                   codec=codec)
+        self._bucket_plan_cache = None   # rebuilt whenever bind() runs
         self.runs: List[PipelineRun] = [
             self._bind_run(inst, layers) for inst in engine.instances]
         if hasattr(engine, "attach_executor"):
@@ -303,15 +323,38 @@ class HeteroTrainer(Executor):
     # ------------------------------------------------------------------
     # Warming: precompute-everything, execution edition
     # ------------------------------------------------------------------
+    def _bucket_plan(self):
+        """The engine's sync plan bound for execution (cached until the
+        next bind): per bucket, the replica lead owners' pods drive the
+        hierarchical ICI/DCN reduction path."""
+        if self._bucket_plan_cache is None:
+            sync_plan = self.engine.sync_plan()
+            topo = self.engine.topology
+            pods = [[topo.pod_of(inst.layer_owners(b.layer_start)[0])
+                     for inst in self.engine.instances]
+                    for b in sync_plan]
+            self._bucket_plan_cache = self._bsync.exec_plan(sync_plan, pods)
+        return self._bucket_plan_cache
+
     def bind(self) -> None:
         """Ensure programs for the CURRENT pipeline set + batch plan are
         cached (cheap after warm_templates(): pure lookups)."""
+        self._bucket_plan_cache = None
         if self.mode != "compiled":
             return
         for run, M in zip(self.runs, self.engine.batch.num_microbatches):
             tok, lab = self._batch_avals(M)
             self._grads_program(run.signature, tok, lab)
-        # seed every distinct layer structure (embed / block / head)
+        if self.sync_mode == "bucketed":
+            plan = self._bucket_plan()
+            self._bsync.bind_plan(plan)
+            # a reconfiguration may have changed the bucket layout or
+            # replica count: stale error-feedback residuals would
+            # shape-mismatch the new buckets — drop them
+            self._bsync.retain_residuals(plan, len(self.engine.instances))
+            return
+        # per-layer update path: seed every distinct layer structure
+        # (embed / block / head)
         for l, aval in enumerate(self._layer_avals):
             state_aval = {"p": aval,
                           "m": jax.tree.map(
@@ -356,8 +399,28 @@ class HeteroTrainer(Executor):
             nll = jnp.zeros((M,), jnp.float32)
             (jnp.sum(nll) / float(M)).block_until_ready()
             del stacked
+        if self.sync_mode == "bucketed":
+            # bucket programs for EVERY layout any reachable instance
+            # set can produce (structure-keyed, so this is a handful of
+            # distinct compiles) + the scalar glue around them — a
+            # reconfiguration must not compile in the sync tail either
+            self._bsync.warm(
+                self.engine.templates.values(),
+                [l.param_bytes for l in self.engine.profile.layers],
+                self.engine.config.bucket_cap_bytes)
+            self._warm_clip_glue()
         self.bind()
         return self.cache.stats.as_dict()
+
+    def _warm_clip_glue(self) -> None:
+        """Dispatch the scalar ops of the norm/clip glue once (sqrt,
+        min/max, division on () arrays are shape-keyed op dispatches)."""
+        sq = jnp.zeros((), jnp.float32)
+        sq = sq + jnp.zeros((), jnp.float32)
+        norm = jnp.sqrt(sq)
+        scale = jnp.minimum(1.0, 1.0 / jnp.maximum(norm, 1e-12))
+        scale.astype(jnp.float32).block_until_ready()
+        jnp.ones(()).astype(jnp.float32).block_until_ready()
 
     # ------------------------------------------------------------------
     # One pipeline's iteration -> per-layer grad means + per-mb NLL
@@ -457,36 +520,52 @@ class HeteroTrainer(Executor):
             if self.on_phase is not None:
                 self.on_phase("grads")
 
-        # ---- layer-granular cross-replica sync (Figure 9) -------------
-        wsum = float(sum(weights))
-        synced: Dict[int, Any] = {}
-        for l in range(self.num_layers):
-            contribs = [(w / wsum, g[l]) for w, g in zip(weights, all_grads)
-                        if l in g]
-            acc = jax.tree.map(lambda t: t * contribs[0][0], contribs[0][1])
-            for w, g in contribs[1:]:
-                acc = jax.tree.map(lambda a, t: a + t * w, acc, g)
-            synced[l] = acc
+        grad_norm = self._sync_and_update(all_grads, weights)
+        loss = sum(jnp.sum(n) for n in nlls) / float(sum(weights))
+        return {"loss": loss, "grad_norm": grad_norm,
+                "num_pipelines": len(self.runs)}
+
+    # ------------------------------------------------------------------
+    # The sync tail: cross-replica sync + global-norm clip + AdamW
+    # (runtime/sync_exec.py, DESIGN.md §10)
+    # ------------------------------------------------------------------
+    def _sync_and_update(self, all_grads: List[Dict[int, Any]],
+                         weights: List[int]) -> jax.Array:
+        """Route the step's tail through the sync data plane and commit
+        the optimizer update on every replica; returns the global grad
+        norm as a device array.  ``sync_mode="bucketed"`` executes the
+        engine's bucket plan as compiled per-bucket programs (deepest
+        first, hierarchical across pods, optional wire codec);
+        ``"perlayer"`` is the eager per-layer oracle."""
+        if self.sync_mode == "bucketed":
+            plan = self._bucket_plan()
+            red = self._bsync.reduce(plan, all_grads, weights)
+            sq = jnp.zeros((), jnp.float32)
+            for s in red.sumsqs:
+                sq = sq + s
+            grad_norm = jnp.sqrt(sq)
+            scale = self._clip_scale(grad_norm)
+            if self.on_phase is not None:
+                self.on_phase("sync")
+            # ---- commit phase: the ONLY mutating part of the step ----
+            self._bsync.commit_residuals(red)
+            step_in = self.opt_step             # adamw.apply increments
+            self.opt_step = self.opt_step + 1
+            for run in self.runs:
+                self._bsync.update(plan, red.flats, run.states, scale,
+                                   step_in)
+            return grad_norm
+
+        # ---- per-layer oracle (Figure 9, the pre-§10 runtime path) ----
+        synced = perlayer_sync(all_grads, weights, self.num_layers)
         if self.on_phase is not None:
             self.on_phase("sync")
-
-        # ---- global-norm clip across the WHOLE model -------------------
-        # (clipping per layer would diverge from the SPMD fast path);
-        # all-device arithmetic: the scale is folded into the compiled
-        # update, never forced to the host
-        sq = jnp.zeros((), jnp.float32)
-        for l in range(self.num_layers):
-            for t in jax.tree.leaves(synced[l]):
-                sq = sq + jnp.sum(jnp.square(t.astype(jnp.float32)))
-        grad_norm = jnp.sqrt(sq)
-        if self.opt_cfg.clip_norm:
-            scale = jnp.minimum(
-                1.0, self.opt_cfg.clip_norm / jnp.maximum(grad_norm, 1e-12))
-        else:
-            scale = jnp.ones(())
-        scale = scale.astype(jnp.float32)
-
-        # ---- identical AdamW update on every replica -------------------
+        # global-norm clip across the WHOLE model (clipping per layer
+        # would diverge from the SPMD fast path); all-device arithmetic:
+        # the scale is folded into the compiled update, never forced to
+        # the host
+        grad_norm = jnp.sqrt(perlayer_global_sumsq(synced, self.num_layers))
+        scale = self._clip_scale(grad_norm)
         step_in = self.opt_step                 # adamw.apply increments
         self.opt_step = self.opt_step + 1
         for run in self.runs:
@@ -494,9 +573,15 @@ class HeteroTrainer(Executor):
                 st = run.states[l]
                 prog = self._update_program(st, synced[l])
                 run.states[l] = prog(st, synced[l], scale, step_in)
-        loss = sum(jnp.sum(n) for n in nlls) / float(sum(weights))
-        return {"loss": loss, "grad_norm": grad_norm,
-                "num_pipelines": len(self.runs)}
+        return grad_norm
+
+    def _clip_scale(self, grad_norm: jax.Array) -> jax.Array:
+        if self.opt_cfg.clip_norm:
+            scale = jnp.minimum(
+                1.0, self.opt_cfg.clip_norm / jnp.maximum(grad_norm, 1e-12))
+        else:
+            scale = jnp.ones(())
+        return scale.astype(jnp.float32)
 
     # Executor interface --------------------------------------------------
     def step(self, batches: List[List[Dict]]) -> Dict:

@@ -103,7 +103,8 @@ class OobleckPolicy(Policy, Executor):
     def __init__(self, profile: cm.ModelProfile, nodes: List[str],
                  f: int, global_batch: int, microbatch: int,
                  n0: Optional[int] = None, max_stages: Optional[int] = None,
-                 topology=None, nodes_per_pod: int = 8):
+                 topology=None, nodes_per_pod: int = 8,
+                 codec: str = "none"):
         self.profile = profile
         self.stats = PolicyStats()
         self.sim_step = 0
@@ -116,9 +117,18 @@ class OobleckPolicy(Policy, Executor):
             EngineConfig(fault_tolerance=f, global_batch=global_batch,
                          microbatch=microbatch, gpus_per_node=1,
                          n0_override=n0, max_stages=max_stages,
-                         nodes_per_pod=nodes_per_pod),
+                         nodes_per_pod=nodes_per_pod, codec=codec),
             topology=topology)
         self.engine.attach_executor(self)
+
+    def sync_tail_seconds(self) -> float:
+        """Exposed cross-replica sync time per simulated iteration —
+        DELEGATED to the engine's shared per-bucket overlap model
+        (core/sync.py SyncCostModel), so simulator and runtime cost
+        accounting are one implementation by construction.  Tests pin
+        this number against an independently-constructed SyncCostModel
+        to catch wiring drift."""
+        return self.engine._sync_tail_seconds()
 
     # Executor interface (simulated time) ------------------------------
     def bind(self) -> None:

@@ -1,0 +1,438 @@
+"""Compiled bucketed gradient-sync data plane (DESIGN.md §10) — the
+parity suite:
+
+  1. PARITY — the bucketed compiled sync tail computes the SAME synced
+     gradients as the eager per-layer oracle: BITWISE for codec="none"
+     (same per-element multiply/add order), bounded error for bf16/int8,
+     and the error-feedback residual keeps the time-averaged applied
+     gradient convergent to the true one.
+  2. ZERO RECOMPILATION — warm_templates() also warms bucket programs:
+     a failure -> recover -> step cycle fires no XLA backend compiles,
+     including the sync tail, for codec="none" AND for int8.
+  3. RECONFIGURATION SAFETY — error-feedback residuals are keyed by
+     bucket signature and dropped when recover/join changes the layout
+     (the shape-mismatch regression), and training continues cleanly.
+  4. SHARED COST MODEL — the engine and the simulator policy price the
+     sync tail through ONE implementation and agree exactly; the
+     hierarchical ICI/DCN path is cheaper than a flat DCN ring.
+  5. WIRE ACCOUNTING — flat_wire_bytes matches the bytes the flat codec
+     actually produces (one int8 scale per bucket, not per leaf).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.core import EngineConfig, OobleckEngine, build_profile
+from repro.core.sync import (SyncBucket, SyncCostModel, build_sync_plan,
+                             flat_wire_bytes, split_span)
+from repro.data import GlobalBatchDispenser, SyntheticLM
+from repro.models import Model
+from repro.optim import adamw
+from repro.runtime import HeteroTrainer, track_compiles
+from repro.runtime.compression import (ErrorFeedback, encode_flat,
+                                       encoded_nbytes, roundtrip_flat)
+from repro.runtime.sync_exec import BucketedSync, perlayer_sync
+from repro.runtime.executor import ProgramCache
+from repro.utils import hw as hwlib
+
+RNG = jax.random.PRNGKey(7)
+GB, MB, SEQ = 16, 2, 16
+
+
+def make_setup(n_nodes=5, f=1, layers=4, clip=1.0):
+    arch = reduced(get_arch("gpt3_medium"), layers=layers)
+    model = Model(arch, dtype=jnp.float32, remat=False, attn_impl="naive",
+                  scan_layers=False)
+    params = model.init(RNG)
+    profile = build_profile(arch, microbatch=MB, seq_len=SEQ)
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=0, clip_norm=clip,
+                                weight_decay=0.0)
+
+    def mk_engine(**kw):
+        return OobleckEngine(
+            profile, [f"n{i}" for i in range(n_nodes)],
+            EngineConfig(fault_tolerance=f, global_batch=GB, microbatch=MB,
+                         gpus_per_node=1, n0_override=2, **kw))
+    return arch, model, params, opt_cfg, mk_engine
+
+
+def microbatches(batch, mb_size=MB):
+    n = batch["tokens"].shape[0] // mb_size
+    return [{k: v[i * mb_size:(i + 1) * mb_size] for k, v in batch.items()
+             if not k.startswith("_")} for i in range(n)]
+
+
+def drive(trainer, disp):
+    batches = disp.next_step(trainer.engine.batch.minibatch_sizes())
+    return trainer.train_step([microbatches(b) for b in batches])
+
+
+def synced_of(trainer, all_grads, weights):
+    """The synced per-layer gradient trees the trainer's tail consumes,
+    via its own data plane (bucketed: unflatten the reduced buffers)."""
+    if trainer.sync_mode == "perlayer":
+        return perlayer_sync(all_grads, weights, trainer.num_layers)
+    plan = trainer._bucket_plan()
+    red = trainer._bsync.reduce(plan, all_grads, weights)
+    out = {}
+    for b, flat in zip(plan, red.flats):
+        off = 0
+        for l in b.lids:
+            leaves, treedef = jax.tree_util.tree_flatten(all_grads[0][l])
+            got = []
+            for leaf in leaves:
+                got.append(flat[off:off + leaf.size].reshape(leaf.shape))
+                off += leaf.size
+            out[l] = jax.tree_util.tree_unflatten(treedef, got)
+    return out
+
+
+def grads_and_weights(trainer, disp):
+    batches = disp.next_step(trainer.engine.batch.minibatch_sizes())
+    per_pipe = [microbatches(b) for b in batches]
+    all_grads, weights = [], []
+    for run, mbs in zip(trainer.runs, per_pipe):
+        g, _ = trainer._run_pipeline(run, mbs)
+        all_grads.append(g)
+        weights.append(len(mbs))
+    return all_grads, weights
+
+
+# ----------------------------------------------------------------------
+# 1. Parity
+# ----------------------------------------------------------------------
+def test_bucketed_synced_grads_bitwise_equal_eager_for_codec_none():
+    arch, model, params, opt_cfg, mk_engine = make_setup()
+    tr = HeteroTrainer(model, mk_engine(), params, opt_cfg, mode="compiled")
+    src = SyntheticLM(arch.vocab_size, SEQ, seed=21)
+    disp = GlobalBatchDispenser(src)
+    all_grads, weights = grads_and_weights(tr, disp)
+
+    got = synced_of(tr, all_grads, weights)
+    want = perlayer_sync(all_grads, weights, tr.num_layers)
+    assert sorted(got) == sorted(want)
+    for l in got:
+        for a, b in zip(jax.tree.leaves(got[l]), jax.tree.leaves(want[l])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_bucketed_trajectory_bitwise_equal_perlayer_without_clip():
+    """With clipping off the scale is exactly 1.0 on both paths, so the
+    whole parameter trajectory must be BITWISE identical."""
+    arch, model, params, opt_cfg, mk_engine = make_setup(clip=0.0)
+    tb = HeteroTrainer(model, mk_engine(), params, opt_cfg, mode="compiled")
+    tp = HeteroTrainer(model, mk_engine(), params, opt_cfg, mode="compiled",
+                       sync_mode="perlayer")
+    src = SyntheticLM(arch.vocab_size, SEQ, seed=23)
+    db, dp = GlobalBatchDispenser(src), GlobalBatchDispenser(src)
+    for _ in range(3):
+        ob, op = drive(tb, db), drive(tp, dp)
+        assert float(ob["loss"]) == float(op["loss"])
+    for a, b in zip(jax.tree.leaves(tb.full_params()),
+                    jax.tree.leaves(tp.full_params())):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert tb.replica_divergence() == 0.0
+
+
+@pytest.mark.parametrize("codec,rtol", [("bf16", 8e-3), ("int8", 3e-2)])
+def test_codec_synced_grads_bounded_error(codec, rtol):
+    arch, model, params, opt_cfg, mk_engine = make_setup()
+    tr = HeteroTrainer(model, mk_engine(), params, opt_cfg, mode="compiled",
+                       codec=codec)
+    src = SyntheticLM(arch.vocab_size, SEQ, seed=29)
+    disp = GlobalBatchDispenser(src)
+    all_grads, weights = grads_and_weights(tr, disp)
+    got = synced_of(tr, all_grads, weights)
+    want = perlayer_sync(all_grads, weights, tr.num_layers)
+    # int8 quantizes each replica contribution with a per-BUCKET scale,
+    # so the bound is relative to the largest true gradient element
+    gmax = max(float(jnp.max(jnp.abs(t))) for l in want
+               for t in jax.tree.leaves(want[l]))
+    for l in want:
+        for a, b in zip(jax.tree.leaves(got[l]), jax.tree.leaves(want[l])):
+            a, b = np.asarray(a), np.asarray(b)
+            assert np.abs(a - b).max() <= rtol * gmax, \
+                (l, np.abs(a - b).max(), gmax)
+
+
+def test_error_feedback_mean_applied_converges_to_true_gradient():
+    """Feed the SAME gradients every step through the int8 bucketed
+    plane: with per-bucket error feedback the cumulative applied
+    gradient tracks the true sum (error stays ~one quantization step
+    instead of growing linearly)."""
+    arch, model, params, opt_cfg, mk_engine = make_setup()
+    tr = HeteroTrainer(model, mk_engine(), params, opt_cfg, mode="compiled",
+                       codec="int8")
+    src = SyntheticLM(arch.vocab_size, SEQ, seed=31)
+    disp = GlobalBatchDispenser(src)
+    all_grads, weights = grads_and_weights(tr, disp)
+    true = perlayer_sync(all_grads, weights, tr.num_layers)
+    probe = 1                              # a block layer
+    true_leaf = np.asarray(jax.tree.leaves(true[probe])[0])
+
+    plan = tr._bucket_plan()
+    bucket = next(b for b in plan if probe in b.lids)
+    off = 0
+    for l in bucket.lids:
+        if l == probe:
+            break
+        off += sum(leaf.size for leaf in jax.tree.leaves(all_grads[0][l]))
+    leaf0 = jax.tree.leaves(all_grads[0][probe])[0]
+
+    T = 12
+    total = np.zeros_like(true_leaf)
+    errs = []
+    for t in range(1, T + 1):
+        red = tr._bsync.reduce(plan, all_grads, weights)
+        tr._bsync.commit_residuals(red)
+        flat = red.flats[plan.index(bucket)]
+        applied = np.asarray(flat[off:off + leaf0.size]).reshape(leaf0.shape)
+        total += applied
+        errs.append(np.abs(total - t * true_leaf).max())
+    # bounded, not linearly growing: late error ~ early error
+    assert errs[-1] < 4 * max(errs[1], 1e-9), errs
+    # and the mean applied gradient converges to the true one
+    assert errs[-1] / T < 0.02 * max(np.abs(true_leaf).max(), 1e-12)
+
+
+def test_hierarchical_cross_pod_reduction_matches_flat_to_reassociation():
+    """With 2-node pods the replica leads span pods, so the bucketed
+    plane takes the executed two-level path (pod partial sums, then the
+    cross-pod exchange).  That is a reassociation of the same sum: equal
+    to the per-layer oracle up to fp32 ULP, and replicas stay
+    bit-identical because every replica consumes the SAME buffer."""
+    arch, model, params, opt_cfg, mk_engine = make_setup()
+    tr = HeteroTrainer(model, mk_engine(nodes_per_pod=2), params, opt_cfg,
+                       mode="compiled")
+    assert any(b.hierarchical for b in tr._bucket_plan()), \
+        "2-node pods must force a cross-pod peer group"
+    src = SyntheticLM(arch.vocab_size, SEQ, seed=43)
+    disp = GlobalBatchDispenser(src)
+    all_grads, weights = grads_and_weights(tr, disp)
+    got = synced_of(tr, all_grads, weights)
+    want = perlayer_sync(all_grads, weights, tr.num_layers)
+    for l in want:
+        for a, b in zip(jax.tree.leaves(got[l]), jax.tree.leaves(want[l])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-7)
+    out = drive(tr, disp)
+    assert np.isfinite(float(out["loss"]))
+    assert tr.replica_divergence() == 0.0
+
+
+# ----------------------------------------------------------------------
+# 2. Zero recompilation, including bucket programs
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("codec", ["none", "int8"])
+def test_recover_step_zero_compiles_with_warmed_bucket_programs(codec):
+    arch, model, params, opt_cfg, mk_engine = make_setup()
+    tr = HeteroTrainer(model, mk_engine(), params, opt_cfg, mode="compiled",
+                       codec=codec)
+    tr.warm_templates()
+    src = SyntheticLM(arch.vocab_size, SEQ, seed=37)
+    disp = GlobalBatchDispenser(src)
+    out = drive(tr, disp)
+    out["loss"].block_until_ready()
+    victim = tr.engine.instances[0].nodes[-1]
+    compiles_before = tr.cache.stats.compiles
+    with track_compiles() as log:
+        tr.recover({victim})
+        out = drive(tr, disp)
+        out["loss"].block_until_ready()
+    assert tr.cache.stats.compiles == compiles_before
+    assert log.backend_compiles == 0, \
+        f"{log.backend_compiles} XLA compiles during recover->step ({codec})"
+
+
+# ----------------------------------------------------------------------
+# 3. Reconfiguration drops stale error-feedback residuals
+# ----------------------------------------------------------------------
+def test_residuals_keyed_by_bucket_signature_dropped_on_recover():
+    """The regression this pins: after a template change the bucket
+    layout (spans/sizes) changes; a residual carried across that
+    boundary would shape-mismatch the new buckets.  recover() must drop
+    stale keys and training must continue cleanly."""
+    arch, model, params, opt_cfg, mk_engine = make_setup()
+    tr = HeteroTrainer(model, mk_engine(), params, opt_cfg, mode="compiled",
+                       codec="int8")
+    src = SyntheticLM(arch.vocab_size, SEQ, seed=41)
+    disp = GlobalBatchDispenser(src)
+    drive(tr, disp)
+    keys_before = set(tr._bsync.ef.residuals)
+    assert keys_before, "int8 training must carry residuals"
+    old_plan_sigs = {b.signature for b in tr._bucket_plan()}
+
+    victim = tr.engine.instances[0].nodes[0]
+    tr.recover({victim})
+    new_plan = tr._bucket_plan()
+    new_sigs = {b.signature for b in new_plan}
+    assert new_sigs != old_plan_sigs, \
+        "test needs a reconfiguration that changes the bucket layout"
+    # every surviving residual key is valid for the NEW layout
+    valid = {("ef", b.signature, "int8", r)
+             for b in new_plan for r in range(len(tr.engine.instances))}
+    assert set(tr._bsync.ef.residuals) <= valid
+    out = drive(tr, disp)                  # and training continues
+    assert np.isfinite(float(out["loss"]))
+    assert tr.replica_divergence() == 0.0
+
+
+def test_error_feedback_keyed_apply_survives_layout_change():
+    """compression.ErrorFeedback: keyed apply drops a stale residual
+    whose structure no longer matches, instead of crashing; retain()
+    evicts keys a new layout cannot use."""
+    ef = ErrorFeedback("int8")
+    g_a = {"w": jnp.full((8, 4), 0.01), "b": jnp.full((4,), -0.02)}
+    ef.apply(g_a, key=("bucket", 0, 4))
+    assert ef.get(("bucket", 0, 4)) is not None
+    # same key, NEW shapes (the reconfigured bucket layout): must not
+    # raise, must re-seed the residual against the new structure
+    g_b = {"w": jnp.full((6, 4), 0.01)}
+    out = ef.apply(g_b, key=("bucket", 0, 4))
+    assert jax.tree.structure(out) == jax.tree.structure(g_b)
+    res = ef.get(("bucket", 0, 4))
+    assert jax.tree.structure(res) == jax.tree.structure(g_b)
+    # retain drops everything the new layout doesn't cover
+    ef.apply(g_a, key=("bucket", 4, 6))
+    dropped = ef.retain([("bucket", 0, 4)])
+    assert dropped == 1
+    assert ef.get(("bucket", 4, 6)) is None
+    # legacy single-tree API still works and is retained
+    legacy = ErrorFeedback("int8")
+    legacy.apply(g_a)
+    legacy.retain([])
+    assert legacy.residual is not None
+
+
+# ----------------------------------------------------------------------
+# 4. Shared sync cost model: engine == simulator, hierarchy pays off
+# ----------------------------------------------------------------------
+def test_engine_and_simulator_agree_on_sync_tail():
+    """The policy delegates to the engine (one implementation), and the
+    engine's wiring matches an INDEPENDENTLY constructed SyncCostModel
+    over the same plan/topology/codec — catching drift in either."""
+    from repro.sim.policies import OobleckPolicy
+    arch = reduced(get_arch("gpt2"), layers=8)
+    profile = build_profile(arch, microbatch=2, seq_len=64)
+    nodes = [f"n{i}" for i in range(6)]
+    pol = OobleckPolicy(profile, nodes, f=1, global_batch=32, microbatch=2,
+                        n0=2, nodes_per_pod=2, codec="bf16")
+    expected = SyncCostModel(
+        hw=profile.hw, codec="bf16",
+        topology=pol.engine.topology).tail_seconds(
+            pol.engine.sync_plan(), profile.layer_bwd_seconds())
+    assert expected > 0
+    assert pol.sync_tail_seconds() == expected
+    assert pol.engine._sync_tail_seconds() == expected
+    # the tail is part of what the simulator charges per iteration
+    assert pol.iteration_time() > expected
+
+
+def test_hierarchical_cross_pod_beats_flat_dcn_ring():
+    class Topo:
+        def pod_of(self, n):
+            return int(n[1:]) // 4        # 4-node pods
+
+    bucket = SyncBucket(0, 4, ((tuple(f"n{i}" for i in range(8)),)),
+                        64 * 1024 * 1024)
+    hier = SyncCostModel(topology=Topo())
+    flat_dcn, _ = SyncCostModel(topology=None)._group_seconds(
+        [f"n{i}" for i in range(8)], hier.bucket_wire_bytes(bucket))
+    # price the flat path at DCN (what a naive cross-pod ring pays)
+    flat_dcn *= hwlib.V5E.ici_bandwidth / hwlib.V5E.dcn_bandwidth
+    got, crossed = hier.bucket_seconds(bucket)
+    assert crossed
+    assert got < flat_dcn, (got, flat_dcn)
+
+
+def test_codec_shrinks_modeled_tail():
+    arch = reduced(get_arch("gpt2"), layers=8)
+    profile = build_profile(arch, microbatch=2, seq_len=64)
+
+    def tail(codec):
+        eng = OobleckEngine(
+            profile, [f"n{i}" for i in range(6)],
+            EngineConfig(fault_tolerance=1, global_batch=32, microbatch=2,
+                         gpus_per_node=1, n0_override=2, codec=codec))
+        return eng._sync_tail_seconds()
+
+    t_none, t_bf16, t_int8 = tail("none"), tail("bf16"), tail("int8")
+    assert t_none > t_bf16 > t_int8 > 0
+
+
+def test_schedule_overlap_exposes_only_the_spill():
+    """Deep buckets hide behind the remaining backward; the tail is what
+    the shallowest bucket spills past the end of backward."""
+    groups = ((("a", "b"),),)
+    plan = [SyncBucket(2, 4, groups, 1 << 20),
+            SyncBucket(0, 2, groups, 1 << 20)]
+    m = SyncCostModel()
+    slow_bwd = [1.0, 1.0, 1.0, 1.0]       # plenty of hiding budget
+    fast_bwd = [1e-9] * 4                  # nothing to hide behind
+    rows = m.schedule(plan, slow_bwd)
+    assert rows[0].ready_s == 2.0 and rows[1].ready_s == 4.0
+    exposed_slow = m.tail_seconds(plan, slow_bwd)
+    exposed_fast = m.tail_seconds(plan, fast_bwd)
+    comm_total = sum(r.comm_s for r in rows)
+    # with fast backward EVERYTHING is exposed; with slow backward only
+    # the last bucket's reduction can spill
+    assert abs(exposed_fast - comm_total) < 1e-9
+    assert exposed_slow <= rows[-1].comm_s + 1e-12
+
+
+def test_split_span_matches_build_sync_plan_cap_splits():
+    """The warmer and the planner must agree on cap-splitting — that is
+    what makes reconfiguration zero-compile for bucket programs."""
+    arch, model, params, opt_cfg, mk_engine = make_setup()
+    eng = mk_engine()
+    layer_bytes = [l.param_bytes for l in eng.profile.layers]
+    cap = max(layer_bytes) * 2 + 1        # force real splits
+    plan = build_sync_plan(eng.instances, layer_bytes, bucket_cap_bytes=cap)
+    spans = {(b.layer_start, b.layer_end) for b in plan}
+    # every planner bucket is a cap-split of SOME boundary-pair span
+    cover = set()
+    bounds = sorted({0, eng.profile.num_layers}
+                    | {st.layer_start for t in eng.templates.values()
+                       for st in t.stages}
+                    | {st.layer_end for t in eng.templates.values()
+                       for st in t.stages})
+    for i, s in enumerate(bounds):
+        for e in bounds[i + 1:]:
+            cover |= set(split_span(s, e, layer_bytes, cap))
+    assert spans <= cover, spans - cover
+
+
+# ----------------------------------------------------------------------
+# 5. Wire accounting: one scale per FLAT bucket
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("codec", ["none", "bf16", "int8"])
+def test_flat_wire_bytes_matches_encoded_size(codec):
+    flat = jax.random.normal(jax.random.PRNGKey(3), (1000,)) * 0.01
+    enc = encode_flat(flat, codec)
+    assert flat_wire_bytes(flat.size, codec) == encoded_nbytes(enc, codec)
+
+
+def test_flat_int8_uses_one_scale_per_bucket_not_per_leaf():
+    from repro.runtime.compression import wire_bytes
+    tree = {"a": jnp.ones((100,)), "b": jnp.ones((50,)),
+            "c": {"d": jnp.ones((25,))}}
+    n = 175
+    # tree-shaped wire format pays one scale per leaf...
+    assert wire_bytes(tree, "int8") == n + 4 * 3
+    # ...the flattened bucket pays exactly one
+    assert flat_wire_bytes(n, "int8") == n + 4
+    rt = roundtrip_flat(jnp.concatenate([jnp.ravel(x) for x in
+                                         jax.tree.leaves(tree)]), "int8")
+    assert rt.shape == (n,) and rt.dtype == jnp.float32
+
+
+def test_cost_model_prices_flat_wire_bytes():
+    bucket = SyncBucket(0, 2, ((("a", "b"),),), nbytes=1000)  # bf16 bytes
+    elements = 500
+    assert SyncCostModel(codec="none").bucket_wire_bytes(bucket) == 4 * elements
+    assert SyncCostModel(codec="bf16").bucket_wire_bytes(bucket) == 2 * elements
+    assert SyncCostModel(codec="int8").bucket_wire_bytes(bucket) == elements + 4
