@@ -1,20 +1,162 @@
-"""Roofline benchmark: reads the dry-run artifact (artifacts/dryrun.json,
-produced by ``python -m repro.launch.dryrun``) and reports the three
+"""Roofline benchmarks.
+
+Part 1 (``--dryrun``-artifact report): reads artifacts/dryrun.json
+(produced by ``python -m repro.launch.dryrun``) and reports the three
 roofline terms per (arch x shape x mesh).  Skips gracefully when the
-artifact has not been generated yet."""
+artifact has not been generated yet.
+
+Part 2 (kernel fwd+bwd roofline, always runnable): times the Pallas
+flash-attention and SSD kernels — forward AND the registered custom_vjp
+BACKWARD — against the jnp-oracle recompute backward they replaced
+(``ops.oracle_attention_vjp`` / ``ops.oracle_ssd_vjp``, the pre-§11
+bwd rules).  Emits ``BENCH_kernels.json`` and ASSERTS the Pallas
+backward beats the oracle backward at every benchmarked shape; block
+sizes come from the autotuner exactly as the stage hot path resolves
+them.
+
+    PYTHONPATH=src:. python benchmarks/roofline_report.py \
+        --json BENCH_kernels.json
+"""
 from __future__ import annotations
 
+import argparse
 import json
 import os
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
 
 from benchmarks.common import Csv
+from repro.kernels.autotune import _time
 
 ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "artifacts",
                         "dryrun.json")
 
+#: (B, S, H, KV, D) — long sequences, where the O(S²)-materializing
+#: oracle backward is at its worst and real training runs.
+FLASH_SHAPES = [(1, 1024, 2, 2, 64), (1, 2048, 2, 2, 64)]
+#: (B, S, H, P, N)
+SSD_SHAPES = [(1, 1024, 4, 32, 32), (1, 2048, 2, 64, 32)]
 
-def main(csv: Csv | None = None) -> None:
-    csv = csv or Csv()
+
+def _flash_cell(shape, iters: int) -> Dict:
+    from repro.kernels import autotune, ops, ref
+    from repro.kernels import flash_attention as fa
+    B, S, H, KV, D = shape
+    backend = ops.resolve_backend()
+    interp = ops.interpret_mode(backend)
+    cfg = autotune.flash_config(backend, jnp.float32, S, D)
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, KV, D))
+    v = jax.random.normal(ks[2], (B, S, KV, D))
+    g = jax.random.normal(ks[3], q.shape)
+
+    fwd_pallas = _time(jax.jit(lambda q, k, v: fa.flash_attention(
+        q, k, v, block_q=cfg["block_q"], block_k=cfg["block_k"],
+        interpret=interp)), q, k, v, iters=iters)
+    fwd_oracle = _time(jax.jit(ref.attention_ref), q, k, v, iters=iters)
+
+    out, lse = fa.flash_attention_fwd(
+        q, k, v, block_q=cfg["block_q"], block_k=cfg["block_k"],
+        interpret=interp)
+    bwd_pallas = _time(jax.jit(lambda q, k, v, out, lse, g:
+                               fa.flash_attention_bwd(
+                                   q, k, v, out, lse, g,
+                                   block_q=cfg["block_q"],
+                                   block_k=cfg["block_k"],
+                                   interpret=interp)),
+                       q, k, v, out, lse, g, iters=iters)
+    bwd_oracle = _time(jax.jit(ops.oracle_attention_vjp), q, k, v, g,
+                       iters=iters)
+    # causal matmul flops: fwd 2 GEMMs over S²/2 positions, bwd 5 GEMMs
+    fwd_flops = 2 * 2 * B * H * (S * S // 2) * D
+    return {
+        "kernel": "flash_attention", "shape": list(shape),
+        "blocks": cfg, "backend": backend, "interpret": interp,
+        "fwd_pallas_s": fwd_pallas, "fwd_oracle_s": fwd_oracle,
+        "bwd_pallas_s": bwd_pallas, "bwd_oracle_s": bwd_oracle,
+        "bwd_speedup": bwd_oracle / bwd_pallas,
+        "fwd_gflops": fwd_flops / fwd_pallas / 1e9,
+        "bwd_gflops": 2.5 * fwd_flops / bwd_pallas / 1e9,
+    }
+
+
+def _ssd_cell(shape, iters: int) -> Dict:
+    from repro.kernels import autotune, ops, ref
+    from repro.kernels import ssd as ssdk
+    B, S, H, P, N = shape
+    backend = ops.resolve_backend()
+    interp = ops.interpret_mode(backend)
+    chunk = autotune.ssd_config(backend, jnp.float32, S, P, N)["chunk"]
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, H, N))
+    Cm = jax.random.normal(ks[4], (B, S, H, N))
+
+    fwd_pallas = _time(jax.jit(lambda x, dt, A, Bm, Cm: ssdk.ssd(
+        x, dt, A, Bm, Cm, chunk=chunk, interpret=interp)[0]),
+        x, dt, A, Bm, Cm, iters=iters)
+    fwd_oracle = _time(jax.jit(lambda x, dt, A, Bm, Cm:
+                               ref.ssd_ref(x, dt, A, Bm, Cm)[0]),
+                       x, dt, A, Bm, Cm, iters=iters)
+
+    y, state, cst = ssdk.ssd_fwd(x, dt, A, Bm, Cm, chunk=chunk,
+                                 interpret=interp)
+    gy = jax.random.normal(jax.random.PRNGKey(7), y.shape)
+    gs = jnp.zeros_like(state)
+    bwd_pallas = _time(jax.jit(lambda *a: ssdk.ssd_bwd(
+        *a, chunk=chunk, interpret=interp)),
+        x, dt, A, Bm, Cm, cst, gy, gs, iters=iters)
+    bwd_oracle = _time(
+        jax.jit(lambda x, dt, A, Bm, Cm, gy, gs: ops.oracle_ssd_vjp(
+            x, dt, A, Bm, Cm, (gy, gs))),
+        x, dt, A, Bm, Cm, gy, gs, iters=iters)
+    # intra-chunk [Q,Q] GEMMs dominate: ~3 per chunk fwd
+    fwd_flops = 2 * 3 * B * H * S * chunk * max(P, N)
+    return {
+        "kernel": "ssd", "shape": list(shape), "chunk": chunk,
+        "backend": backend, "interpret": interp,
+        "fwd_pallas_s": fwd_pallas, "fwd_oracle_s": fwd_oracle,
+        "bwd_pallas_s": bwd_pallas, "bwd_oracle_s": bwd_oracle,
+        "bwd_speedup": bwd_oracle / bwd_pallas,
+        "fwd_gflops": fwd_flops / fwd_pallas / 1e9,
+        "bwd_gflops": 2.5 * fwd_flops / bwd_pallas / 1e9,
+    }
+
+
+def kernel_roofline(csv: Csv, iters: int = 3,
+                    check: bool = True) -> Dict:
+    """fwd+bwd kernel roofline; asserts the Pallas backward beats the
+    oracle-recompute backward at every shape (acceptance criterion)."""
+    from repro.kernels import ops
+    cells: List[Dict] = []
+    for shape in FLASH_SHAPES:
+        cells.append(_flash_cell(shape, iters))
+    for shape in SSD_SHAPES:
+        cells.append(_ssd_cell(shape, iters))
+    for c in cells:
+        name = f"kernels/{c['kernel']}/" + "x".join(map(str, c["shape"]))
+        csv.add(f"{name}/fwd_pallas_s", c["fwd_pallas_s"] * 1e6,
+                f"{c['fwd_gflops']:.2f}GF/s")
+        csv.add(f"{name}/bwd_pallas_s", c["bwd_pallas_s"] * 1e6,
+                f"{c['bwd_gflops']:.2f}GF/s")
+        csv.add(f"{name}/bwd_oracle_s", c["bwd_oracle_s"] * 1e6,
+                f"speedup={c['bwd_speedup']:.2f}x")
+        if check:
+            assert c["bwd_pallas_s"] < c["bwd_oracle_s"], (
+                f"Pallas backward slower than the oracle backward at "
+                f"{name}: {c['bwd_pallas_s']:.4f}s vs "
+                f"{c['bwd_oracle_s']:.4f}s")
+    return {"backend": ops.resolve_backend(),
+            "interpret": ops.interpret_mode(), "iters": iters,
+            "cells": cells}
+
+
+def dryrun_report(csv: Csv) -> None:
     path = os.path.abspath(ARTIFACT)
     if not os.path.exists(path):
         csv.add("roofline/skipped", 0.0,
@@ -38,5 +180,27 @@ def main(csv: Csv | None = None) -> None:
                 f"{r['model_flops_ratio']:.3f}")
 
 
+def main(csv: Optional[Csv] = None, argv: Optional[List[str]] = None) -> Dict:
+    csv = csv or Csv()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="",
+                    help="write the kernel roofline to this path "
+                         "(BENCH_kernels.json)")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--no-check", action="store_true",
+                    help="report without asserting bwd beats the oracle")
+    args = ap.parse_args(argv if argv is not None else [])
+    dryrun_report(csv)
+    result = kernel_roofline(csv, iters=args.iters,
+                             check=not args.no_check)
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"wrote {args.json}")
+    return result
+
+
 if __name__ == "__main__":
-    main()
+    import sys
+    main(argv=sys.argv[1:])

@@ -6,7 +6,8 @@ Emits ``name,us_per_call,derived`` CSV rows:
   table4_ckpt        — Table 4 (checkpoint-overhead ablation)
   fig10_spot_traces  — Figure 10 / Appendix C (spot instance replay)
   fig11_breakdown    — Figure 11 (time-occupation breakdown)
-  roofline_report    — §Roofline terms from the dry-run artifact
+  roofline_report    — §Roofline terms from the dry-run artifact + the
+                       kernel fwd/bwd roofline (Pallas vs oracle bwd)
   planning_scale     — beyond-paper: planner/reconfig latency vs cluster size
   step_time          — compiled per-template programs vs eager reference
                        (steady-state + reconfiguration-to-first-step)
@@ -16,13 +17,20 @@ Emits ``name,us_per_call,derived`` CSV rows:
   sync_throughput    — compiled bucketed gradient-sync data plane vs the
                        eager per-layer tail (sync + clip + AdamW), plus
                        the shared per-bucket overlap cost model
+
+Machine-readable results are ALSO written to the repo root as
+``BENCH_<suite>.json`` (roofline -> BENCH_kernels.json) so benchmark
+trajectories live in the tree, not only in CI artifacts.
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
 
 from benchmarks.common import Csv
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
 def main() -> None:
@@ -32,17 +40,22 @@ def main() -> None:
                             table2_throughput, table3_planning,
                             table4_ckpt_ablation)
     only = sys.argv[1] if len(sys.argv) > 1 else None
+
+    def bench_json(name: str):
+        return ["--json", os.path.join(ROOT, f"BENCH_{name}.json")]
+
+    # suite -> (fn, argv or None); argv-taking suites persist BENCH_*.json
     suites = {
-        "table2": table2_throughput.main,
-        "table3": table3_planning.main,
-        "table4": table4_ckpt_ablation.main,
-        "fig10": fig10_spot_traces.main,
-        "fig11": fig11_breakdown.main,
-        "roofline": roofline_report.main,
-        "planning_scale": planning_scale.main,
-        "step_time": step_time.main,
-        "recovery_latency": recovery_latency.main,
-        "sync_throughput": sync_throughput.main,
+        "table2": (table2_throughput.main, None),
+        "table3": (table3_planning.main, None),
+        "table4": (table4_ckpt_ablation.main, None),
+        "fig10": (fig10_spot_traces.main, None),
+        "fig11": (fig11_breakdown.main, None),
+        "roofline": (roofline_report.main, bench_json("kernels")),
+        "planning_scale": (planning_scale.main, None),
+        "step_time": (step_time.main, bench_json("step_time")),
+        "recovery_latency": (recovery_latency.main, bench_json("recovery")),
+        "sync_throughput": (sync_throughput.main, bench_json("sync")),
     }
     if only is not None and only not in suites:
         print(f"unknown suite {only!r}; choose from: {', '.join(suites)}",
@@ -50,11 +63,14 @@ def main() -> None:
         raise SystemExit(2)
     csv = Csv()
     print("name,us_per_call,derived")
-    for name, fn in suites.items():
+    for name, (fn, argv) in suites.items():
         if only and only != name:
             continue
         t0 = time.perf_counter()
-        fn(csv)
+        if argv is None:
+            fn(csv)
+        else:
+            fn(csv, argv)
         print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
               file=sys.stderr)
 

@@ -3,12 +3,14 @@
 Oobleck itself contributes no kernels (its contribution is planning +
 resilient execution), but the training substrate owns two hot spots that
 are Pallas-tiled for TPU: causal GQA flash attention and the Mamba2 SSD
-chunked scan.  Each kernel ships with a jit wrapper (ops.py) and a
-pure-jnp oracle (ref.py); tests sweep shapes/dtypes against the oracle
-with interpret=True.
+chunked scan — forward AND backward (registered as custom_vjp rules in
+ops.py, DESIGN.md §11).  Each kernel ships with a jit wrapper (ops.py),
+a block-size autotuner (autotune.py) and a pure-jnp oracle (ref.py);
+tests sweep shapes/dtypes against the oracle with interpret=True.
 """
-from repro.kernels import ops, ref
+from repro.kernels import autotune, ops, ref
 from repro.kernels.flash_attention import flash_attention as flash_attention_kernel
 from repro.kernels.ssd import ssd as ssd_kernel
 
-__all__ = ["ops", "ref", "flash_attention_kernel", "ssd_kernel"]
+__all__ = ["autotune", "ops", "ref", "flash_attention_kernel",
+           "ssd_kernel"]

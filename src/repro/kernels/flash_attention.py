@@ -1,4 +1,4 @@
-"""Causal GQA flash-attention forward — Pallas TPU kernel.
+"""Causal GQA flash-attention forward AND backward — Pallas TPU kernels.
 
 TPU-native design (not a CUDA port): the grid is (batch, q_heads,
 q_blocks, kv_blocks) and Mosaic executes it sequentially with the last
@@ -9,21 +9,35 @@ VMEM scratch that persists across the kv_block iterations of one
     q   : (1, 1, BLOCK_Q, D)   revisited for every kv block
     k/v : (1, 1, BLOCK_K, D)   indexed via the GQA head map h -> h//G
     o   : (1, 1, BLOCK_Q, D)   written on the last kv block
+    lse : (1, 1, BLOCK_Q)      log-sum-exp, written with o
 
 Block shapes default to (128, 128) so the MXU sees aligned GEMMs and the
-working set (q + k + v + acc ≈ 4 * 128 * D * 4B) stays far under VMEM.
-Causality is enforced two ways: fully-masked kv blocks are skipped with
-``pl.when`` (no wasted MXU work), and the diagonal block gets an explicit
-position mask.  Optional sliding-window masking supports the Hymba SWA
-branch.  The backward pass uses the standard recompute-from-residuals
-formulation via ``jax.custom_vjp`` in ops.py (forward kernel + XLA
-backward), which keeps the kernel surface small while remat already
-re-runs the forward on TPU.
+working set (q + k + v + acc ≈ 4 * 128 * D * 4B) stays far under VMEM;
+the autotuner (kernels/autotune.py) picks larger blocks where the grid
+overhead dominates (e.g. the CPU interpreter).  Causality is enforced
+two ways: fully-masked kv blocks are skipped with ``pl.when`` (no wasted
+MXU work), and the diagonal block gets an explicit position mask.
+Optional sliding-window masking supports the Hymba SWA branch.
+
+The backward is the standard two-pass recompute-free formulation
+(FlashAttention-2 §3.2): the forward saves (out, lse); ``delta`` =
+rowsum(dO ∘ O) is a cheap jnp preprocessing step; then
+
+    dq kernel : grid (B, H, q_blocks, kv_blocks), dq accumulated in VMEM
+                scratch across the kv axis;
+    dkv kernel: grid (B, H, kv_blocks, q_blocks), dk/dv accumulated in
+                VMEM scratch across the q axis, emitted at Q-head
+                resolution (the GQA group-sum is one jnp reshape-sum).
+
+Both recompute p = exp(s - lse) blockwise from the saved lse — no O(S²)
+probability matrix ever exists, unlike the jnp-oracle backward this
+replaces in ops.py.
 """
 from __future__ import annotations
 
 import functools
 import math
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,9 +49,9 @@ DEFAULT_BLOCK_K = 128
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
-                  block_q: int, block_k: int, seq_len: int, window: int,
-                  num_kv_blocks: int):
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref,
+                  l_ref, *, block_q: int, block_k: int, seq_len: int,
+                  window: int, num_kv_blocks: int):
     iq = pl.program_id(2)
     ik = pl.program_id(3)
 
@@ -83,6 +97,56 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
     def _finalize():
         l = jnp.maximum(l_ref[...], 1e-20)
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        lse_ref[0, 0] = (m_ref[...] + jnp.log(l)).reshape(block_q)
+
+
+def _pad_tr(t: jax.Array, pad: int) -> jax.Array:
+    """[B, S, H, D] -> [B, H, S + pad, D]."""
+    return jnp.pad(t.transpose(0, 2, 1, 3),
+                   ((0, 0), (0, 0), (0, pad), (0, 0)))
+
+
+def _fwd_call(q, k, v, *, window: int, block_q: int, block_k: int,
+              interpret: bool) -> Tuple[jax.Array, jax.Array]:
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    assert H % KV == 0, (H, KV)
+    G = H // KV
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    nq = -(-S // block_q)
+    nk = -(-S // block_k)
+    qt = _pad_tr(q, nq * block_q - S)
+    kt = _pad_tr(k, nk * block_k - S)
+    vt = _pad_tr(v, nk * block_k - S)
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, seq_len=S,
+        window=window, num_kv_blocks=nk)
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, iq, ik: (b, h, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, nq * block_q, D), q.dtype),
+            jax.ShapeDtypeStruct((B, H, nq * block_q), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),   # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),   # m (running max)
+            pltpu.VMEM((block_q, 1), jnp.float32),   # l (running denom)
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out, lse
 
 
 @functools.partial(
@@ -96,9 +160,135 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     q: [B, S, H, D]; k/v: [B, S, KV, D]; H % KV == 0.  Returns [B, S, H, D].
     """
+    S = q.shape[1]
+    out, _ = _fwd_call(q, k, v, window=window, block_q=block_q,
+                       block_k=block_k, interpret=interpret)
+    return out[:, :, :S].transpose(0, 2, 1, 3)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block_q", "block_k", "interpret"))
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        window: int = 0,
+                        block_q: int = DEFAULT_BLOCK_Q,
+                        block_k: int = DEFAULT_BLOCK_K,
+                        interpret: bool = False
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Forward that also returns the softmax log-sum-exp residual.
+
+    Returns (out [B, S, H, D], lse [B, H, S] fp32) — exactly the
+    residuals the two-pass backward needs besides (q, k, v, out).
+    """
+    S = q.shape[1]
+    out, lse = _fwd_call(q, k, v, window=window, block_q=block_q,
+                         block_k=block_k, interpret=interpret)
+    return out[:, :, :S].transpose(0, 2, 1, 3), lse[:, :, :S]
+
+
+# ----------------------------------------------------------------------
+# Backward kernels (two-pass, recompute-free)
+# ----------------------------------------------------------------------
+def _recompute_p(q_ref, k_ref, lse_ref, *, q_start, k_start, seq_len,
+                 window, block_q):
+    """Shared block recompute: scaled scores, mask, p = exp(s - lse)."""
+    q = q_ref[0, 0].astype(jnp.float32)                # [bq, d]
+    k = k_ref[0, 0].astype(jnp.float32)                # [bk, d]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+    s = s * (1.0 / math.sqrt(q.shape[-1]))
+    qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = (kpos <= qpos) & (kpos < seq_len)
+    if window > 0:
+        mask &= kpos > qpos - window
+    lse = lse_ref[0, 0].reshape(block_q, 1)            # [bq, 1]
+    p = jnp.where(mask, jnp.exp(s - lse), 0.0)         # [bq, bk]
+    return q, k, p
+
+
+def _flash_bwd_dq_kernel(q_ref, k_ref, v_ref, g_ref, lse_ref, d_ref,
+                         dq_ref, dq_acc, *, block_q: int, block_k: int,
+                         seq_len: int, window: int, num_kv_blocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    in_past = k_start <= q_start + block_q - 1
+    in_window = (window <= 0) | (k_start + block_k - 1 > q_start - window)
+
+    @pl.when(in_past & in_window)
+    def _compute():
+        q, k, p = _recompute_p(q_ref, k_ref, lse_ref, q_start=q_start,
+                               k_start=k_start, seq_len=seq_len,
+                               window=window, block_q=block_q)
+        v = v_ref[0, 0].astype(jnp.float32)            # [bk, d]
+        g = g_ref[0, 0].astype(jnp.float32)            # [bq, d]
+        delta = d_ref[0, 0].reshape(block_q, 1)        # [bq, 1]
+        dp = jax.lax.dot_general(g, v, (((1,), (1,)), ((), ())))
+        ds = p * (dp - delta) * (1.0 / math.sqrt(q.shape[-1]))
+        dq_acc[...] += jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())))
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        dq_ref[0, 0] = dq_acc[...].astype(dq_ref.dtype)
+
+
+def _flash_bwd_dkv_kernel(q_ref, k_ref, v_ref, g_ref, lse_ref, d_ref,
+                          dk_ref, dv_ref, dk_acc, dv_acc, *, block_q: int,
+                          block_k: int, seq_len: int, window: int,
+                          num_q_blocks: int):
+    ik = pl.program_id(2)
+    iq = pl.program_id(3)
+
+    @pl.when(iq == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    in_past = k_start <= q_start + block_q - 1
+    in_window = (window <= 0) | (k_start + block_k - 1 > q_start - window)
+
+    @pl.when(in_past & in_window)
+    def _compute():
+        q, _, p = _recompute_p(q_ref, k_ref, lse_ref, q_start=q_start,
+                               k_start=k_start, seq_len=seq_len,
+                               window=window, block_q=block_q)
+        v = v_ref[0, 0].astype(jnp.float32)            # [bk, d]
+        g = g_ref[0, 0].astype(jnp.float32)            # [bq, d]
+        delta = d_ref[0, 0].reshape(block_q, 1)        # [bq, 1]
+        dv_acc[...] += jax.lax.dot_general(p, g, (((0,), (0,)), ((), ())))
+        dp = jax.lax.dot_general(g, v, (((1,), (1,)), ((), ())))
+        ds = p * (dp - delta) * (1.0 / math.sqrt(q.shape[-1]))
+        dk_acc[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())))
+
+    @pl.when(iq == num_q_blocks - 1)
+    def _finalize():
+        dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block_q", "block_k", "interpret"))
+def flash_attention_bwd(q: jax.Array, k: jax.Array, v: jax.Array,
+                        out: jax.Array, lse: jax.Array, g: jax.Array, *,
+                        window: int = 0,
+                        block_q: int = DEFAULT_BLOCK_Q,
+                        block_k: int = DEFAULT_BLOCK_K,
+                        interpret: bool = False
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Two-pass flash-attention backward.
+
+    q/g/out: [B, S, H, D]; k/v: [B, S, KV, D]; lse: [B, H, S] fp32.
+    Returns (dq, dk, dv) with the primals' layouts and dtypes.
+    """
     B, S, H, D = q.shape
     KV = k.shape[2]
-    assert H % KV == 0, (H, KV)
     G = H // KV
     block_q = min(block_q, S)
     block_k = min(block_k, S)
@@ -106,29 +296,61 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     nk = -(-S // block_k)
     pad_q = nq * block_q - S
     pad_k = nk * block_k - S
-    qt = jnp.pad(q.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, pad_q), (0, 0)))
-    kt = jnp.pad(k.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, pad_k), (0, 0)))
-    vt = jnp.pad(v.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    qt = _pad_tr(q, pad_q)
+    kt = _pad_tr(k, pad_k)
+    vt = _pad_tr(v, pad_k)
+    gt = _pad_tr(g, pad_q)
+    # delta = rowsum(dO * O) — the cheap preprocessing pass
+    delta = jnp.sum(g.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    delta = jnp.pad(delta.transpose(0, 2, 1), ((0, 0), (0, 0), (0, pad_q)))
+    lse_p = jnp.pad(lse, ((0, 0), (0, 0), (0, pad_q)))
 
-    kernel = functools.partial(
-        _flash_kernel, block_q=block_q, block_k=block_k, seq_len=S,
+    q_spec = pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0))
+    kv_spec = pl.BlockSpec((1, 1, block_k, D),
+                           lambda b, h, i, j: (b, h // G, j, 0))
+    row_spec = pl.BlockSpec((1, 1, block_q), lambda b, h, i, j: (b, h, i))
+
+    dq_kernel = functools.partial(
+        _flash_bwd_dq_kernel, block_q=block_q, block_k=block_k, seq_len=S,
         window=window, num_kv_blocks=nk)
-    out = pl.pallas_call(
-        kernel,
+    dq = pl.pallas_call(
+        dq_kernel,
         grid=(B, H, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
-            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, block_q, D),
-                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        in_specs=[q_spec, kv_spec, kv_spec, q_spec, row_spec, row_spec],
+        out_specs=q_spec,
         out_shape=jax.ShapeDtypeStruct((B, H, nq * block_q, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, D), jnp.float32)],
+        interpret=interpret,
+    )(qt, kt, vt, gt, lse_p, delta)
+
+    # dkv iterates kv blocks outermost: swap the roles of axes 2/3
+    q_spec2 = pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, j, 0))
+    kv_spec2 = pl.BlockSpec((1, 1, block_k, D),
+                            lambda b, h, i, j: (b, h // G, i, 0))
+    row_spec2 = pl.BlockSpec((1, 1, block_q), lambda b, h, i, j: (b, h, j))
+    kv_out2 = pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j: (b, h, i, 0))
+    dkv_kernel = functools.partial(
+        _flash_bwd_dkv_kernel, block_q=block_q, block_k=block_k, seq_len=S,
+        window=window, num_q_blocks=nq)
+    dk_h, dv_h = pl.pallas_call(
+        dkv_kernel,
+        grid=(B, H, nk, nq),
+        in_specs=[q_spec2, kv_spec2, kv_spec2, q_spec2, row_spec2, row_spec2],
+        out_specs=[kv_out2, kv_out2],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, nk * block_k, D), k.dtype),
+            jax.ShapeDtypeStruct((B, H, nk * block_k, D), v.dtype),
+        ],
         scratch_shapes=[
-            pltpu.VMEM((block_q, D), jnp.float32),   # acc
-            pltpu.VMEM((block_q, 1), jnp.float32),   # m (running max)
-            pltpu.VMEM((block_q, 1), jnp.float32),   # l (running denom)
+            pltpu.VMEM((block_k, D), jnp.float32),   # dk
+            pltpu.VMEM((block_k, D), jnp.float32),   # dv
         ],
         interpret=interpret,
-    )(qt, kt, vt)
-    return out[:, :, :S].transpose(0, 2, 1, 3)
+    )(qt, kt, vt, gt, lse_p, delta)
+
+    dq = dq[:, :, :S].transpose(0, 2, 1, 3)
+    # GQA: per-Q-head dk/dv fold onto the KV heads with one reshape-sum
+    dk = dk_h[:, :, :S].reshape(B, KV, G, S, D).sum(axis=2)
+    dv = dv_h[:, :, :S].reshape(B, KV, G, S, D).sum(axis=2)
+    return (dq, dk.transpose(0, 2, 1, 3).astype(k.dtype),
+            dv.transpose(0, 2, 1, 3).astype(v.dtype))

@@ -1,72 +1,171 @@
-"""Jitted public wrappers around the Pallas kernels.
+"""Jitted public wrappers around the Pallas kernels (DESIGN.md §11).
 
-``interpret`` auto-selects: on the CPU container the kernels execute via
-the Pallas interpreter (Python semantics, exact same kernel body); on TPU
-they compile to Mosaic.  Both kernels get a ``jax.custom_vjp`` whose
-backward recomputes through the pure-jnp oracle — flash-attention
-backward-via-recompute is standard practice under activation
-checkpointing, and it keeps the kernel surface auditable.
+Backend gating: ``resolve_backend()`` is consulted at every call (not
+frozen at import), and a COMPILED lowering is selected wherever one
+exists for these kernel structures (``COMPILED_BACKENDS`` — Mosaic
+today; see the note there for why the grid-scratch structure has no
+Triton lowering yet), interpreting only where none does.  Because the
+selection still happens at trace time, any cache of traced programs
+must carry ``backend_signature()`` in its key (the runtime's
+ProgramCache does) — otherwise a program traced under the CPU default
+and reused on an accelerator mesh would silently run the Python
+interpreter at device speed's expense.
+
+Both kernels carry a ``jax.custom_vjp`` whose backward is ALSO a Pallas
+kernel (kernels/flash_attention.py, kernels/ssd.py): flash-attention
+uses the standard two-pass recompute-free dq/dkv structure from the
+saved (out, lse) residuals; SSD replays chunks in reverse from the
+saved chunk-boundary states.  The pure-jnp oracles (kernels/ref.py)
+remain the parity references — ``oracle_attention_vjp`` /
+``oracle_ssd_vjp`` are the OLD recompute-through-oracle backward rules,
+retained for tests and the roofline benchmark's baseline.
+
+Block sizes default to the autotuner's (backend, dtype, shape-bucket)
+cache (kernels/autotune.py); explicit ``block_q``/``block_k``/``chunk``
+arguments override it.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ref as _ref
 from repro.kernels import ssd as _ssd
 
+#: Backends with a compiled Pallas lowering for THESE kernels.  The
+#: rule is capability, not platform: interpret only where no lowering
+#: exists.  Both kernels are Mosaic-structured — online state lives in
+#: ``pltpu.VMEM`` scratch carried across the innermost grid axis, legal
+#: because Mosaic executes the grid sequentially.  The Triton lowering
+#: has no TPU memory spaces and runs grid blocks in parallel, so on GPU
+#: that structure has NO lowering and would corrupt the accumulators if
+#: force-lowered; GPU therefore interprets until a Triton-structured
+#: variant (in-body kv/chunk fori_loop, grid without the reduction
+#: axis) lands — extend this tuple alongside that variant.
+COMPILED_BACKENDS = ("tpu",)
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+
+def resolve_backend() -> str:
+    return jax.default_backend()
+
+
+def interpret_mode(backend: Optional[str] = None) -> bool:
+    """True iff the kernels must run under the Pallas interpreter."""
+    return (backend or resolve_backend()) not in COMPILED_BACKENDS
+
+
+def backend_signature() -> Tuple[str, bool]:
+    """(backend, interpret) — REQUIRED component of any cache key over
+    traced programs that may contain these kernels (the bug this fixes:
+    interpret mode was baked in at trace time, so a program cached on
+    the CPU default ran interpreted when reused on an accelerator)."""
+    backend = resolve_backend()
+    return (backend, interpret_mode(backend))
 
 
 # ----------------------------------------------------------------------
 # Flash attention
 # ----------------------------------------------------------------------
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def flash_attention(q, k, v, window: int = 0, block_q: int = 128,
-                    block_k: int = 128):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, window: int, block_q: int, block_k: int,
+           interpret: bool):
     return _fa.flash_attention(q, k, v, window=window, block_q=block_q,
-                               block_k=block_k, interpret=_interpret())
+                               block_k=block_k, interpret=interpret)
 
 
-def _fa_fwd(q, k, v, window, block_q, block_k):
-    out = flash_attention(q, k, v, window, block_q, block_k)
-    return out, (q, k, v)
+def _flash_fwd(q, k, v, window, block_q, block_k, interpret):
+    out, lse = _fa.flash_attention_fwd(
+        q, k, v, window=window, block_q=block_q, block_k=block_k,
+        interpret=interpret)
+    return out, (q, k, v, out, lse)
 
 
-def _fa_bwd(window, block_q, block_k, res, g):
-    q, k, v = res
-    _, vjp = jax.vjp(lambda q, k, v: _ref.attention_ref(q, k, v,
-                                                        window=window),
-                     q, k, v)
-    return vjp(g)
+def _flash_bwd(window, block_q, block_k, interpret, res, g):
+    q, k, v, out, lse = res
+    return _fa.flash_attention_bwd(
+        q, k, v, out, lse, g, window=window, block_q=block_q,
+        block_k=block_k, interpret=interpret)
 
 
-flash_attention.defvjp(_fa_fwd, _fa_bwd)
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, window: int = 0,
+                    block_q: Optional[int] = None,
+                    block_k: Optional[int] = None) -> jax.Array:
+    """Causal GQA attention with a Pallas forward AND backward.
+
+    q: [B, S, H, D]; k/v: [B, S, KV, D].  Block sizes default to the
+    autotuner's choice for (backend, dtype, S-bucket, D).
+    """
+    backend = resolve_backend()
+    if block_q is None or block_k is None:
+        cfg = autotune.flash_config(backend, q.dtype, q.shape[1],
+                                    q.shape[3])
+        block_q = block_q or cfg["block_q"]
+        block_k = block_k or cfg["block_k"]
+    return _flash(q, k, v, window, block_q, block_k,
+                  interpret_mode(backend))
 
 
 # ----------------------------------------------------------------------
 # SSD (Mamba2 chunked scan)
 # ----------------------------------------------------------------------
-@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
-def ssd(x, dt, A, B, C, chunk: int = 128) -> Tuple[jax.Array, jax.Array]:
-    return _ssd.ssd(x, dt, A, B, C, chunk=chunk, interpret=_interpret())
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _ssd_p(x, dt, A, B, C, chunk: int,
+           interpret: bool) -> Tuple[jax.Array, jax.Array]:
+    return _ssd.ssd(x, dt, A, B, C, chunk=chunk, interpret=interpret)
 
 
-def _ssd_fwd(x, dt, A, B, C, chunk):
-    out = ssd(x, dt, A, B, C, chunk)
-    return out, (x, dt, A, B, C)
+def _ssd_fwd(x, dt, A, B, C, chunk, interpret):
+    y, state, cstates = _ssd.ssd_fwd(x, dt, A, B, C, chunk=chunk,
+                                     interpret=interpret)
+    return (y, state), (x, dt, A, B, C, cstates)
 
 
-def _ssd_bwd(chunk, res, g):
-    x, dt, A, B, C = res
-    _, vjp = jax.vjp(lambda *a: _ref.ssd_ref(*a), x, dt, A, B, C)
+def _ssd_bwd(chunk, interpret, res, g):
+    x, dt, A, B, C, cstates = res
+    gy, gstate = g
+    return _ssd.ssd_bwd(x, dt, A, B, C, cstates, gy,
+                        gstate.astype(jnp.float32), chunk=chunk,
+                        interpret=interpret)
+
+
+_ssd_p.defvjp(_ssd_fwd, _ssd_bwd)
+
+
+def ssd(x, dt, A, B, C,
+        chunk: Optional[int] = None) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD with a Pallas forward AND backward.
+
+    x: [b,S,H,P]; dt: [b,S,H]; A: [H]; B/C: [b,S,H,N].  Returns
+    (y, final_state).  ``chunk`` defaults to the autotuner's choice.
+    """
+    backend = resolve_backend()
+    if chunk is None:
+        chunk = autotune.ssd_config(backend, x.dtype, x.shape[1],
+                                    x.shape[3], B.shape[-1])["chunk"]
+    return _ssd_p(x, dt, A, B, C, chunk, interpret_mode(backend))
+
+
+# ----------------------------------------------------------------------
+# Retained oracle backward rules (parity references + bench baselines)
+# ----------------------------------------------------------------------
+def oracle_attention_vjp(q, k, v, g, window: int = 0):
+    """The pre-§11 backward: recompute the forward through the pure-jnp
+    oracle and backprop through it (O(S²) score materialization)."""
+    _, vjp = jax.vjp(
+        lambda q, k, v: _ref.attention_ref(q, k, v, window=window), q, k, v)
     return vjp(g)
 
 
-ssd.defvjp(_ssd_fwd, _ssd_bwd)
+def oracle_ssd_vjp(x, dt, A, B, C, g):
+    """The pre-§11 backward: recompute through the per-timestep scan
+    oracle and backprop through it (S sequential steps)."""
+    _, vjp = jax.vjp(lambda *a: _ref.ssd_ref(*a), x, dt, A, B, C)
+    return vjp(g)

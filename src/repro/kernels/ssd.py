@@ -1,4 +1,4 @@
-"""Mamba2 SSD chunked scan — Pallas TPU kernel.
+"""Mamba2 SSD chunked scan — Pallas TPU kernels (forward AND backward).
 
 TPU-native structure: the grid is (batch, heads, chunks).  Mosaic runs
 the grid sequentially with the LAST axis innermost, so the inter-chunk
@@ -17,6 +17,16 @@ Per chunk the kernel computes, entirely in VMEM:
 Block shapes: Q = chunk length (default 128 — MXU-aligned), P = head dim,
 N = SSM state size.  The working set Q*Q + Q*(P+2N) fp32 stays well under
 VMEM for every assigned config (mamba2: P=64, N=128; hymba: P=64, N=16).
+
+The backward mirrors the recurrence in REVERSE chunk order (index maps
+c -> nc-1-c), carrying the state cotangent dS in the same VMEM scratch
+slot the forward carries the state in.  It is recompute-free in the
+flash-attention sense: the forward saves only the [P, N] state at each
+chunk BOUNDARY (``ssd_fwd``'s third output, S/Q of them) and every
+intra-chunk quantity (cum, decay, W) is rebuilt blockwise in VMEM —
+never the O(S·Q) full set.  All decay-product terms mask with
+``jnp.where(tri, ..., 0)`` AFTER the multiply: above-diagonal decays can
+overflow to inf and 0*inf would poison the block with NaNs.
 """
 from __future__ import annotations
 
@@ -32,7 +42,13 @@ DEFAULT_CHUNK = 128
 
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref,
-                state_scratch, *, chunk: int):
+                *rest, chunk: int):
+    # the fwd-for-bwd variant adds a cstates output (the state ENTERING
+    # each chunk); the plain forward pays nothing for it
+    if len(rest) == 2:
+        cstates_ref, state_scratch = rest
+    else:
+        cstates_ref, (state_scratch,) = None, rest
     ci = pl.program_id(2)
 
     @pl.when(ci == 0)
@@ -59,6 +75,8 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref,
 
     # inter-chunk: y += (C * exp(cum)) @ state^T
     state = state_scratch[...]                         # [P, N]
+    if cstates_ref is not None:
+        cstates_ref[0, 0, 0] = state                   # bwd residual
     c_scaled = Cm * jnp.exp(cum)                       # [Q, N]
     y = y + jax.lax.dot_general(c_scaled, state,
                                 (((1,), (1,)), ((), ())))        # [Q, P]
@@ -74,29 +92,38 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref,
     state_ref[0, 0] = new_state
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
-        C: jax.Array, *, chunk: int = DEFAULT_CHUNK,
-        interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
-    """Chunked SSD.  x: [b,S,H,P]; dt: [b,S,H]; A: [H]; B/C: [b,S,H,N].
+def _pad_seq(t: jax.Array, pad: int) -> jax.Array:
+    return jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
 
-    Returns (y [b,S,H,P], final_state [b,H,P,N] fp32).
-    """
+
+def _ssd_call(x, dt, A, B, C, *, chunk: int, interpret: bool,
+              with_cstates: bool):
     b, S, H, P = x.shape
     N = B.shape[-1]
     chunk = min(chunk, max(S, 8))
     pad = (-S) % chunk
     if pad:
-        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
-        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        x, dt, B, C = (_pad_seq(t, pad) for t in (x, dt, B, C))
     S_p = S + pad
     nc = S_p // chunk
     a2 = A.reshape(H, 1)
 
+    out_specs = [
+        pl.BlockSpec((1, chunk, 1, P), lambda i, h, c: (i, c, h, 0)),
+        pl.BlockSpec((1, 1, P, N), lambda i, h, c: (i, h, 0, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((b, S_p, H, P), x.dtype),
+        jax.ShapeDtypeStruct((b, H, P, N), jnp.float32),
+    ]
+    if with_cstates:
+        out_specs.append(
+            pl.BlockSpec((1, 1, 1, P, N), lambda i, h, c: (i, h, c, 0, 0)))
+        out_shape.append(
+            jax.ShapeDtypeStruct((b, H, nc, P, N), jnp.float32))
+
     kernel = functools.partial(_ssd_kernel, chunk=chunk)
-    y, state = pl.pallas_call(
+    outs = pl.pallas_call(
         kernel,
         grid=(b, H, nc),
         in_specs=[
@@ -106,15 +133,192 @@ def ssd(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
             pl.BlockSpec((1, chunk, 1, N), lambda i, h, c: (i, c, h, 0)),
             pl.BlockSpec((1, chunk, 1, N), lambda i, h, c: (i, c, h, 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((1, chunk, 1, P), lambda i, h, c: (i, c, h, 0)),
-            pl.BlockSpec((1, 1, P, N), lambda i, h, c: (i, h, 0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((b, S_p, H, P), x.dtype),
-            jax.ShapeDtypeStruct((b, H, P, N), jnp.float32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
         interpret=interpret,
     )(x, dt, a2, B, C)
-    return y[:, :S], state
+    if with_cstates:
+        y, state, cstates = outs
+        return y[:, :S], state, cstates
+    y, state = outs
+    return y[:, :S], state, None
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+        C: jax.Array, *, chunk: int = DEFAULT_CHUNK,
+        interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.  x: [b,S,H,P]; dt: [b,S,H]; A: [H]; B/C: [b,S,H,N].
+
+    Returns (y [b,S,H,P], final_state [b,H,P,N] fp32).
+    """
+    y, state, _ = _ssd_call(x, dt, A, B, C, chunk=chunk,
+                            interpret=interpret, with_cstates=False)
+    return y, state
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_fwd(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+            C: jax.Array, *, chunk: int = DEFAULT_CHUNK,
+            interpret: bool = False
+            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Forward that also returns the chunk-boundary states
+    (``cstates [b, H, nc, P, N]`` fp32, the state ENTERING each chunk) —
+    the only residual the backward kernel needs beyond the inputs."""
+    return _ssd_call(x, dt, A, B, C, chunk=chunk, interpret=interpret,
+                     with_cstates=True)
+
+
+# ----------------------------------------------------------------------
+# Backward kernel (reverse chunk order)
+# ----------------------------------------------------------------------
+def _ssd_bwd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, s0_ref, gy_ref,
+                    gstate_ref, dx_ref, ddt_ref, db_ref, dc_ref, da_ref,
+                    dstate_scratch, da_acc, *, chunk: int, nc: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        dstate_scratch[...] = gstate_ref[0, 0]
+        da_acc[...] = jnp.zeros_like(da_acc)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # [Q, P]
+    dt = dt_ref[0].astype(jnp.float32)                 # [Q, 1]
+    A = a_ref[0, 0]                                    # scalar
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)         # [Q, N]
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)         # [Q, N]
+    S0 = s0_ref[0, 0, 0]                               # [P, N]
+    G = gy_ref[0, :, 0, :].astype(jnp.float32)         # [Q, P]
+    dS1 = dstate_scratch[...]                          # [P, N]
+
+    a = dt * A
+    cum = jnp.cumsum(a, axis=0)                        # [Q, 1]
+    dt_row = dt.reshape(1, chunk)                      # [1, Q]
+    decay = jnp.exp(cum - cum.reshape(1, chunk))       # [Q, Q]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tri = ii >= jj
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))  # [Q, Q]
+    W = jnp.where(tri, cb * decay, 0.0) * dt_row       # [Q, Q]
+    ecum = jnp.exp(cum)                                # [Q, 1]
+    Cs = Cm * ecum                                     # [Q, N]
+    cum_last = cum[chunk - 1]                          # [1]
+    eQ = jnp.exp(cum_last)[0]                          # scalar
+    w_last = jnp.exp(cum_last.reshape(1, 1) - cum) * dt           # [Q, 1]
+
+    # --- y_intra = W x ------------------------------------------------
+    dW = jax.lax.dot_general(G, x, (((1,), (1,)), ((), ())))      # [Q, Q]
+    # --- S1 = S0 * eQ + (x ∘ w_last)^T B ------------------------------
+    BH = jax.lax.dot_general(Bm, dS1, (((1,), (1,)), ((), ())))   # [Q, P]
+    dx = (jax.lax.dot_general(W, G, (((0,), (0,)), ((), ())))     # W^T G
+          + BH * w_last)
+    dx_ref[0, :, 0, :] = dx.astype(dx_ref.dtype)
+
+    # d(cb) = tri * dW * decay * dt_j  (mask AFTER multiply: above-diag
+    # decay can be inf; 0 * inf = NaN)
+    dcb = jnp.where(tri, dW * decay, 0.0) * dt_row                # [Q, Q]
+    GS0 = jax.lax.dot_general(G, S0, (((1,), (0,)), ((), ())))    # [Q, N]
+    xdS1 = jax.lax.dot_general(x, dS1, (((1,), (0,)), ((), ())))  # [Q, N]
+    dC = (jax.lax.dot_general(dcb, Bm, (((1,), (0,)), ((), ())))
+          + GS0 * ecum)
+    dB = (jax.lax.dot_general(dcb, Cm, (((0,), (0,)), ((), ())))
+          + xdS1 * w_last)
+    dc_ref[0, :, 0, :] = dC.astype(dc_ref.dtype)
+    db_ref[0, :, 0, :] = dB.astype(db_ref.dtype)
+
+    # --- cum cotangent ------------------------------------------------
+    TW = dW * W                                        # [Q, Q], tri via W
+    dcum = (jnp.sum(TW, axis=1, keepdims=True)         # decay's +cum_i
+            - jnp.sum(TW, axis=0).reshape(chunk, 1)    # decay's -cum_j
+            + jnp.sum(GS0 * Cs, axis=1, keepdims=True))  # y_inter's e^cum
+    dw = jnp.sum(xdS1 * Bm, axis=1, keepdims=True)     # [Q, 1] d(w_last)
+    V = dw * w_last
+    dcum = dcum - V                                    # w_last's -cum_j
+    # cum_{Q-1} terms: S1's e^{cum_Q} and w_last's +cum_Q
+    last = (jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)
+            == chunk - 1)
+    dcum = dcum + jnp.where(
+        last, jnp.sum(dS1 * S0) * eQ + jnp.sum(V), 0.0)
+
+    # --- dt cotangent -------------------------------------------------
+    ddt = (jnp.sum(jnp.where(tri, dW * decay, 0.0) * cb,
+                   axis=0).reshape(chunk, 1)           # W's dt_j factor
+           + dw * jnp.exp(cum_last.reshape(1, 1) - cum))  # w_last's dt
+    # cumsum backward: da_i = sum_{i' >= i} dcum_{i'}
+    da = (jnp.sum(dcum, axis=0, keepdims=True)
+          - jnp.cumsum(dcum, axis=0) + dcum)
+    ddt = ddt + da * A
+    ddt_ref[0] = ddt.astype(ddt_ref.dtype)
+    da_acc[...] += jnp.sum(da * dt)
+
+    # --- state cotangent for the PRECEDING chunk ----------------------
+    dstate_scratch[...] = (eQ * dS1
+                           + jax.lax.dot_general(G, Cs,
+                                                 (((0,), (0,)), ((), ()))))
+
+    @pl.when(ci == nc - 1)
+    def _finalize():
+        da_ref[0, 0] = da_acc[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_bwd(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+            C: jax.Array, cstates: jax.Array, gy: jax.Array,
+            gstate: jax.Array, *, chunk: int = DEFAULT_CHUNK,
+            interpret: bool = False):
+    """Reverse-chunk SSD backward.
+
+    Inputs are the forward primals, the saved chunk-boundary states and
+    the cotangents (gy for y, gstate for the final state).  Returns
+    (dx, ddt, dA, dB, dC) with the primals' layouts and dtypes.
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, max(S, 8))
+    pad = (-S) % chunk
+    if pad:
+        x, dt, B, C, gy = (_pad_seq(t, pad) for t in (x, dt, B, C, gy))
+    S_p = S + pad
+    nc = S_p // chunk
+    a2 = A.reshape(H, 1)
+
+    seq_p = lambda i, h, c: (i, nc - 1 - c, h, 0)      # reversed chunks
+    seq_p3 = lambda i, h, c: (i, nc - 1 - c, h)
+    kernel = functools.partial(_ssd_bwd_kernel, chunk=chunk, nc=nc)
+    dx, ddt, dB, dC, dA2 = pl.pallas_call(
+        kernel,
+        grid=(b, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), seq_p),
+            pl.BlockSpec((1, chunk, 1), seq_p3),
+            pl.BlockSpec((1, 1), lambda i, h, c: (h, 0)),
+            pl.BlockSpec((1, chunk, 1, N), seq_p),
+            pl.BlockSpec((1, chunk, 1, N), seq_p),
+            pl.BlockSpec((1, 1, 1, P, N),
+                         lambda i, h, c: (i, h, nc - 1 - c, 0, 0)),
+            pl.BlockSpec((1, chunk, 1, P), seq_p),
+            pl.BlockSpec((1, 1, P, N), lambda i, h, c: (i, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), seq_p),
+            pl.BlockSpec((1, chunk, 1), seq_p3),
+            pl.BlockSpec((1, chunk, 1, N), seq_p),
+            pl.BlockSpec((1, chunk, 1, N), seq_p),
+            pl.BlockSpec((1, 1), lambda i, h, c: (i, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, S_p, H, P), x.dtype),
+            jax.ShapeDtypeStruct((b, S_p, H), dt.dtype),
+            jax.ShapeDtypeStruct((b, S_p, H, N), B.dtype),
+            jax.ShapeDtypeStruct((b, S_p, H, N), C.dtype),
+            jax.ShapeDtypeStruct((b, H), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((P, N), jnp.float32),           # dstate carry
+            pltpu.VMEM((1, 1), jnp.float32),           # dA accumulator
+        ],
+        interpret=interpret,
+    )(x, dt, a2, B, C, cstates, gy, gstate)
+    dA = jnp.sum(dA2, axis=0).astype(A.dtype)
+    return dx[:, :S], ddt[:, :S], dA, dB[:, :S], dC[:, :S]

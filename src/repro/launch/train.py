@@ -74,6 +74,14 @@ def main(argv=None) -> dict:
                          "compiled per-template program cache")
     ap.add_argument("--no-warm", action="store_true",
                     help="skip bootstrap warming of the full template set")
+    ap.add_argument("--attn-impl", default="naive",
+                    choices=["naive", "blocked", "kernel", "auto"],
+                    help="attention path for stage layers; 'kernel' is "
+                         "the Pallas fwd+bwd hot path, 'auto' selects it "
+                         "wherever a compiled lowering exists")
+    ap.add_argument("--ssd-impl", default="chunked",
+                    choices=["chunked", "scan", "kernel", "auto"],
+                    help="SSD path for Mamba2/hybrid stage layers")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -87,7 +95,8 @@ def main(argv=None) -> dict:
     arch = get_arch(args.arch)
     if not args.full:
         arch = reduced(arch, layers=args.layers)
-    model = Model(arch, dtype=jnp.float32, remat=False, attn_impl="naive",
+    model = Model(arch, dtype=jnp.float32, remat=False,
+                  attn_impl=args.attn_impl, ssd_impl=args.ssd_impl,
                   scan_layers=False)
     params = model.init(jax.random.PRNGKey(args.seed))
 

@@ -1,13 +1,17 @@
-"""GQA attention: training/prefill (full or blocked/online-softmax) and
-single-token decode against a KV cache.
+"""GQA attention: training/prefill (full, blocked/online-softmax, or
+Pallas kernel) and single-token decode against a KV cache.
 
-Two prefill paths with identical semantics:
+Three prefill paths with identical semantics:
   * ``naive``   — materializes the [S, S] score matrix; fine for smoke
     tests and short sequences.
   * ``blocked`` — lax.scan over KV blocks with online softmax (the
     flash-attention recurrence in pure XLA).  HBM traffic is O(S) instead
-    of O(S^2), which is what the Pallas kernel (kernels/flash_attention.py)
-    implements natively on TPU; this path is also its numerical oracle.
+    of O(S^2); this path is also the kernel's numerical oracle.
+  * ``kernel``  — the Pallas flash-attention kernel through kernels/ops.py
+    with its registered Pallas BACKWARD (custom_vjp), autotuned block
+    sizes, compiled where a lowering exists for its structure (Mosaic
+    on TPU; elsewhere it runs interpreted — see ops.COMPILED_BACKENDS).
+    This is the stage hot path the per-template compiled programs run.
 
 GQA is expressed by reshaping Q to [B, S, KV, G, D] (G = heads-per-kv
 group) so K/V are never materialized at Q's head count.
@@ -145,7 +149,10 @@ def attention(params, arch: ArchConfig, x: jax.Array, *,
     q, k, v = _project_qkv(params, arch, x, positions)
     window = (arch.sliding_window if window_override is None
               else window_override)
-    if impl == "blocked" and S > 1:
+    if impl == "kernel" and S > 1:
+        from repro.kernels import ops as kops
+        o = kops.flash_attention(q, k, v, window=window)
+    elif impl == "blocked" and S > 1:
         o = _sdpa_blocked(q, k, v, causal=True, window=window,
                           block_kv=min(block_kv, S))
     else:

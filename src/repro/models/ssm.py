@@ -200,8 +200,11 @@ def mamba(params, arch: ArchConfig, x: jax.Array, *,
     if evaluator == "chunked":
         y, _ = ssd_chunked(xh, dt, A, Bh, Ch, chunk=c.chunk_size)
     elif evaluator == "kernel":
+        # chunk=None: the autotuner picks per (backend, dtype, shape
+        # bucket) — SSD is chunk-invariant, so the config's chunk_size
+        # only binds the XLA "chunked" evaluator above
         from repro.kernels import ops as kops
-        y, _ = kops.ssd(xh, dt, A, Bh, Ch, chunk=c.chunk_size)
+        y, _ = kops.ssd(xh, dt, A, Bh, Ch)
     else:
         y, _ = ssd_scan(xh, dt, A, Bh, Ch)
     y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh

@@ -46,8 +46,13 @@ class Model:
     # "dots" saves matmul outputs (jax dots_with_no_batch_dims_saveable —
     # trades ~1.3x HBM for skipping GEMM recompute in backward).
     remat_policy: str = "full"
-    attn_impl: str = "blocked"          # blocked | naive
-    ssd_impl: str = "chunked"           # chunked | scan | kernel
+    # "kernel" routes stage layers through the Pallas kernels in
+    # kernels/ops.py (fwd AND bwd custom_vjp, autotuned blocks); "auto"
+    # picks "kernel" wherever a compiled Pallas lowering exists for the
+    # kernel structure (ops.COMPILED_BACKENDS — TPU today) and the
+    # pure-XLA paths on interpreting backends.
+    attn_impl: str = "blocked"          # blocked | naive | kernel | auto
+    ssd_impl: str = "chunked"           # chunked | scan | kernel | auto
     moe_impl: str = "dense"             # dense | grouped
     constrain: Constrain = _identity_constrain
     # hook applied to a block's params at entry (FSDP gather-at-use)
@@ -59,6 +64,15 @@ class Model:
     # unroll the layer scan: the dry-run sets this so cost_analysis sees
     # every layer (XLA counts while-loop bodies once) — roofline fidelity.
     scan_unroll: bool = False
+
+    def __post_init__(self):
+        if "auto" in (self.attn_impl, self.ssd_impl):
+            from repro.kernels import ops as kops
+            compiled = not kops.interpret_mode()
+            if self.attn_impl == "auto":
+                self.attn_impl = "kernel" if compiled else "blocked"
+            if self.ssd_impl == "auto":
+                self.ssd_impl = "kernel" if compiled else "chunked"
 
     # ------------------------------------------------------------------
     # Init

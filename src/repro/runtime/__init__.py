@@ -3,8 +3,8 @@ from repro.runtime.executor import (Executor, ExecutorUnsupported,
                                     track_compiles, track_host_transfers,
                                     tree_spec)
 from repro.runtime.pipeline import HeteroTrainer, split_into_layers
-from repro.runtime.schedule import (flat_schedule, one_f_one_b,
-                                    simulate_makespan)
+from repro.runtime.schedule import (ScheduleError, flat_schedule,
+                                    one_f_one_b, simulate_makespan)
 from repro.runtime.sharding import ShardingStrategy
 from repro.runtime import spmd
 from repro.runtime.spmd import SPMDExecutor
@@ -16,7 +16,8 @@ from repro.runtime.transfer import (Topology, TransferPlan, TransferPlanError,
 __all__ = ["Executor", "ExecutorUnsupported", "ProgramCache",
            "template_signature", "track_compiles", "track_host_transfers",
            "tree_spec", "HeteroTrainer", "split_into_layers",
-           "flat_schedule", "one_f_one_b", "simulate_makespan",
+           "ScheduleError", "flat_schedule", "one_f_one_b",
+           "simulate_makespan",
            "ShardingStrategy", "spmd", "SPMDExecutor", "BucketedSync",
            "BucketExec", "perlayer_global_sumsq", "perlayer_sync",
            "Topology", "TransferPlan", "TransferPlanError",

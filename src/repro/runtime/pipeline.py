@@ -50,6 +50,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.engine import OobleckEngine
+from repro.kernels import ops as kops
 from repro.core.reconfigure import PipelineInstance
 from repro.models import Model
 from repro.models.layers import cross_entropy, embed, unembed
@@ -260,7 +261,12 @@ class HeteroTrainer(Executor):
         """Compiled per-(template-signature, microbatch-count) step
         program: scan over microbatches, in-program 1F1B gradient
         accumulation, per-microbatch NLL returned as an array."""
-        key = ("grads", sig, _tree_spec(tok_aval), _tree_spec(lab_aval),
+        # backend_signature: a stage program may contain Pallas kernels
+        # whose interpret-vs-compiled lowering is resolved at TRACE time;
+        # without it a program traced under the CPU default would be
+        # silently reused (interpreted!) on an accelerator mesh.
+        key = ("grads", kops.backend_signature(), sig,
+               _tree_spec(tok_aval), _tree_spec(lab_aval),
                _tree_spec(fe_aval) if fe_aval is not None else None)
 
         def build() -> Callable:

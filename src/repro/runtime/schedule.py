@@ -9,10 +9,14 @@ simulator to time heterogeneous pipelines.
 """
 from __future__ import annotations
 
-import heapq
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 Op = Tuple[str, int]          # ("F"|"B", microbatch index)
+
+
+class ScheduleError(RuntimeError):
+    """The per-stage op sequences deadlocked: no stage's head op has its
+    dependencies satisfied.  Raised (never spun on) by flat_schedule."""
 
 
 def one_f_one_b(num_stages: int, num_microbatches: int) -> List[List[Op]]:
@@ -32,11 +36,23 @@ def one_f_one_b(num_stages: int, num_microbatches: int) -> List[List[Op]]:
     return out
 
 
-def flat_schedule(num_stages: int, num_microbatches: int
+def flat_schedule(num_stages: int, num_microbatches: int,
+                  per_stage: Optional[List[List[Op]]] = None
                   ) -> List[Tuple[int, str, int]]:
     """Dependency-respecting serialization: (stage, op, mb) triples in an
-    order a single controller can execute."""
-    per_stage = one_f_one_b(num_stages, num_microbatches)
+    order a single controller can execute.
+
+    ``per_stage`` overrides the generated 1F1B sequences (used by tests
+    and by callers with custom schedules).  A malformed sequence — an op
+    whose dependency can never be produced — raises ``ScheduleError``
+    naming every stuck (stage, op, mb) head instead of spinning: the
+    ``while len(out) < total`` loop would otherwise never terminate once
+    ``progressed`` stays False.
+    """
+    if per_stage is None:
+        per_stage = one_f_one_b(num_stages, num_microbatches)
+    else:
+        num_stages = len(per_stage)     # the sequences define the stages
     ptr = [0] * num_stages
     done_f = [set() for _ in range(num_stages)]
     done_b = [set() for _ in range(num_stages)]
@@ -57,7 +73,12 @@ def flat_schedule(num_stages: int, num_microbatches: int
                 (done_f if op == "F" else done_b)[s].add(mb)
                 ptr[s] += 1
                 progressed = True
-        assert progressed, "1F1B schedule deadlocked (bug)"
+        if not progressed:
+            stuck = [(s, *per_stage[s][ptr[s]]) for s in range(num_stages)
+                     if ptr[s] < len(per_stage[s])]
+            raise ScheduleError(
+                f"schedule cannot progress after {len(out)}/{total} ops; "
+                f"stuck head ops (stage, op, mb): {stuck}")
     return out
 
 

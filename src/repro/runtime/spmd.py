@@ -173,7 +173,8 @@ class SPMDExecutor(Executor):
         return _avals_of(batch)
 
     def _program(self, batch_avals: Dict):
-        key = ("spmd-train",
+        from repro.kernels import ops as kops
+        key = ("spmd-train", kops.backend_signature(),
                tuple(sorted((k, tuple(v.shape), str(v.dtype))
                             for k, v in batch_avals.items())))
 

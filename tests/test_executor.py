@@ -290,3 +290,53 @@ def test_hetero_trainer_snapshot_roundtrips_through_ckpt(tmp_path):
     # moments are REAL (non-zero after a step), not re-initialized
     assert any(float(jnp.max(jnp.abs(m))) > 0
                for m in jax.tree.leaves(restored.opt_state.m))
+
+
+# ----------------------------------------------------------------------
+# 5. Kernel hot path (DESIGN.md §11): Pallas fwd+bwd inside the cached
+#    per-template programs, still zero-compile across reconfiguration
+# ----------------------------------------------------------------------
+def test_kernel_path_recover_step_zero_compiles():
+    """With attn_impl='kernel' and ssd_impl='kernel' the per-template
+    step programs contain the Pallas forward AND backward kernels (the
+    hybrid arch exercises both flash-attention and SSD).  warm_templates
+    must still make failure -> recover -> first-step run with ZERO XLA
+    backend compiles, and every grads program key must carry the kernel
+    backend signature (interpret-mode gating is part of cache identity)."""
+    from repro.kernels import ops as kops
+    arch = reduced(get_arch("hymba_1_5b"), layers=2)
+    model = Model(arch, dtype=jnp.float32, remat=False, attn_impl="kernel",
+                  ssd_impl="kernel", scan_layers=False)
+    params = model.init(RNG)
+    profile = build_profile(arch, microbatch=MB, seq_len=SEQ)
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=0, clip_norm=1.0,
+                                weight_decay=0.0)
+    from repro.core import EngineConfig, OobleckEngine
+    engine = OobleckEngine(
+        profile, [f"n{i}" for i in range(5)],
+        EngineConfig(fault_tolerance=1, global_batch=8, microbatch=MB,
+                     gpus_per_node=1, n0_override=2))
+    trainer = HeteroTrainer(model, engine, params, opt_cfg)
+    trainer.warm_templates()
+    for key in trainer.cache.keys():
+        if key[0] == "grads":
+            assert key[1] == kops.backend_signature(), key
+
+    src = SyntheticLM(arch.vocab_size, SEQ, seed=21)
+    disp = GlobalBatchDispenser(src)
+
+    def drive():
+        batches = disp.next_step(trainer.engine.batch.minibatch_sizes())
+        return trainer.train_step([microbatches(b, MB) for b in batches])
+
+    out = drive()
+    out["loss"].block_until_ready()
+    assert bool(jnp.isfinite(out["loss"]))
+    victim = trainer.engine.instances[0].nodes[-1]
+    with track_compiles() as log:
+        trainer.recover({victim})
+        out = drive()
+        out["loss"].block_until_ready()
+    assert log.backend_compiles == 0, \
+        f"{log.backend_compiles} XLA compiles during recover->step on " \
+        f"the kernel path"

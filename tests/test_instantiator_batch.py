@@ -8,7 +8,8 @@ from hypothesis import given, settings, strategies as st
 from repro.core import (PipelinePlanner, PlanningError, choose_plan,
                         distribute_microbatches, enumerate_feasible_sets,
                         generate_node_spec)
-from repro.core.batch import _objective, distribute_batch, recommend_global_batch
+from repro.core.batch import (_distribute_microbatches_reference, _objective,
+                              distribute_batch, recommend_global_batch)
 
 
 def test_paper_figure7_example():
@@ -37,9 +38,9 @@ def test_min_count_filter():
     assert (4, 0, 0) in sets
 
 
-@settings(max_examples=40, deadline=None)
-@given(total=st.integers(4, 120),
-       times=st.lists(st.floats(0.1, 10.0), min_size=2, max_size=6))
+@settings(max_examples=60, deadline=None)
+@given(total=st.integers(4, 240),
+       times=st.lists(st.floats(0.1, 10.0), min_size=2, max_size=10))
 def test_batch_distribution_feasible_and_locally_optimal(total, times):
     if total < len(times):
         with pytest.raises(PlanningError):
@@ -60,6 +61,21 @@ def test_batch_distribution_feasible_and_locally_optimal(total, times):
             trial[i] -= 1
             trial[j] += 1
             assert _objective(trial, times) >= base - 1e-9
+
+
+@settings(max_examples=60, deadline=None)
+@given(total=st.integers(2, 160),
+       times=st.lists(st.one_of(st.floats(0.1, 10.0),
+                                st.integers(1, 5).map(float)),
+                      min_size=2, max_size=8))
+def test_incremental_descent_matches_reference(total, times):
+    """The O(1)-delta descent is bit-identical to the retained
+    full-recompute oracle — including integer-time tie storms where the
+    two objective forms round differently in the last ulp."""
+    if total < len(times):
+        return
+    assert (distribute_microbatches(times, total)
+            == _distribute_microbatches_reference(times, total))
 
 
 def test_batch_distribution_exact_small_bruteforce():

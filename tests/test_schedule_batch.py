@@ -1,0 +1,125 @@
+"""Regression tests for two control-plane bugfixes (hypothesis-free so
+they always run):
+
+1. ``flat_schedule`` must RAISE on a malformed per-stage sequence —
+   the historical behavior was an infinite loop (``progressed`` stays
+   False but ``while len(out) < total`` never exits; the ``assert``
+   vanished under ``python -O``).
+2. ``distribute_microbatches``'s incremental-delta descent must return
+   counts BIT-IDENTICAL to the retained full-recompute reference,
+   including on tie-heavy instances where fp rounding of the two
+   objective forms differs.
+"""
+import itertools
+import random
+
+import pytest
+
+from repro.core.batch import (_distribute_microbatches_reference, _objective,
+                              distribute_microbatches)
+from repro.core.templates import PlanningError
+from repro.runtime.schedule import ScheduleError, flat_schedule, one_f_one_b
+
+
+# ----------------------------------------------------------------------
+# flat_schedule deadlock
+# ----------------------------------------------------------------------
+def test_flat_schedule_valid_still_works():
+    flat = flat_schedule(3, 4)
+    assert len(flat) == 2 * 3 * 4
+
+
+def test_flat_schedule_raises_on_backward_before_forward():
+    # stage 0 tries to run B(0) before any forward exists anywhere
+    per_stage = [[("B", 0), ("F", 0)], [("F", 0), ("B", 0)]]
+    with pytest.raises(ScheduleError) as ei:
+        flat_schedule(2, 1, per_stage=per_stage)
+    # the error names the stuck (stage, op, mb) heads
+    assert "(0, 'B', 0)" in str(ei.value)
+
+
+def test_flat_schedule_raises_on_missing_upstream_microbatch():
+    # stage 1 waits for F(1) from stage 0, which never produces it
+    per_stage = [[("F", 0)], [("F", 0), ("F", 1)]]
+    with pytest.raises(ScheduleError) as ei:
+        flat_schedule(2, 2, per_stage=per_stage)
+    assert "(1, 'F', 1)" in str(ei.value)
+    assert "2/3" in str(ei.value)          # progress made before the stall
+
+
+def test_flat_schedule_raises_on_cyclic_wait():
+    # both stages' heads wait on the other: classic deadlock shape
+    per_stage = [[("B", 0), ("F", 0)], [("B", 0), ("F", 0)]]
+    with pytest.raises(ScheduleError):
+        flat_schedule(2, 1, per_stage=per_stage)
+
+
+def test_flat_schedule_custom_valid_sequence_accepted():
+    per_stage = one_f_one_b(4, 3)
+    flat = flat_schedule(4, 3, per_stage=per_stage)
+    assert len(flat) == sum(len(ops) for ops in per_stage)
+
+
+# ----------------------------------------------------------------------
+# distribute_microbatches: incremental descent == reference, bitwise
+# ----------------------------------------------------------------------
+def test_descent_bit_identical_random_instances():
+    rng = random.Random(7)
+    for trial in range(400):
+        x = rng.randint(2, 8)
+        total = rng.randint(x, 160)
+        kind = trial % 3
+        if kind == 0:
+            times = [rng.uniform(0.1, 10.0) for _ in range(x)]
+        elif kind == 1:                      # tie-heavy: integer times
+            times = [float(rng.randint(1, 6)) for _ in range(x)]
+        else:                                # tie-heavy: repeated values
+            times = [rng.choice([0.5, 1.0, 1.0, 2.0]) for _ in range(x)]
+        assert (distribute_microbatches(times, total)
+                == _distribute_microbatches_reference(times, total)), (
+            times, total)
+
+
+def test_descent_bit_identical_large_instance():
+    rng = random.Random(13)
+    times = [rng.uniform(0.5, 5.0) for _ in range(64)]
+    assert (distribute_microbatches(times, 512)
+            == _distribute_microbatches_reference(times, 512))
+
+
+@pytest.mark.parametrize("times,total", [
+    ([1.0, 2.0, 4.0], 14),
+    ([1.0, 1.0, 1.0], 9),
+    ([0.3, 0.7, 1.9, 2.2], 21),
+    ([5.0, 1.0], 11),
+])
+def test_bruteforce_optimality_small(times, total):
+    counts = distribute_microbatches(times, total)
+    assert sum(counts) == total and min(counts) >= 1
+    best = min(
+        (c for c in itertools.product(range(1, total + 1), repeat=len(times))
+         if sum(c) == total),
+        key=lambda c: _objective(list(c), times))
+    assert _objective(counts, times) <= _objective(list(best), times) + 1e-9
+
+
+def test_bruteforce_optimality_larger_instances():
+    """Satellite: brute-force cross-check extended beyond the original
+    3-pipeline/14-mb case."""
+    rng = random.Random(3)
+    for _ in range(6):
+        x = rng.randint(2, 4)
+        total = rng.randint(x, 24)
+        times = [rng.uniform(0.2, 4.0) for _ in range(x)]
+        counts = distribute_microbatches(times, total)
+        best = min(
+            (c for c in itertools.product(range(1, total + 1), repeat=x)
+             if sum(c) == total),
+            key=lambda c: _objective(list(c), times))
+        assert (_objective(counts, times)
+                <= _objective(list(best), times) + 1e-9), (times, total)
+
+
+def test_infeasible_still_raises():
+    with pytest.raises(PlanningError):
+        distribute_microbatches([1.0, 1.0, 1.0], 2)
