@@ -17,6 +17,9 @@ Emits ``name,us_per_call,derived`` CSV rows:
   sync_throughput    — compiled bucketed gradient-sync data plane vs the
                        eager per-layer tail (sync + clip + AdamW), plus
                        the shared per-bucket overlap cost model
+  recovery_policy    — per-policy recovery downtime (replan vs schedule
+                       adaptation vs the per-event auto selector) across
+                       the scenario families
 
 Machine-readable results are ALSO written to the repo root as
 ``BENCH_<suite>.json`` (roofline -> BENCH_kernels.json) so benchmark
@@ -36,9 +39,9 @@ ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 def main() -> None:
     from benchmarks import (fig10_spot_traces, fig11_breakdown,
                             planning_scale, recovery_latency,
-                            roofline_report, step_time, sync_throughput,
-                            table2_throughput, table3_planning,
-                            table4_ckpt_ablation)
+                            recovery_policy, roofline_report, step_time,
+                            sync_throughput, table2_throughput,
+                            table3_planning, table4_ckpt_ablation)
     only = sys.argv[1] if len(sys.argv) > 1 else None
 
     def bench_json(name: str):
@@ -55,6 +58,8 @@ def main() -> None:
         "planning_scale": (planning_scale.main, None),
         "step_time": (step_time.main, bench_json("step_time")),
         "recovery_latency": (recovery_latency.main, bench_json("recovery")),
+        "recovery_policy": (recovery_policy.main,
+                            bench_json("recovery_policy")),
         "sync_throughput": (sync_throughput.main, bench_json("sync")),
     }
     if only is not None and only not in suites:

@@ -1,5 +1,7 @@
 # The paper's primary contribution: pipeline-template planning and the
 # resilient execution engine (Oobleck, SOSP 2023).
+from repro.core.adapt import (AdaptationError, AdaptCostModel, AdaptCostRow,
+                              AdaptPlan)
 from repro.core.batch import BatchPlan, distribute_batch, distribute_microbatches
 from repro.core.cost_model import LayerCost, ModelProfile, build_profile
 from repro.core.engine import EngineConfig, OobleckEngine
@@ -16,6 +18,7 @@ from repro.core.templates import (NodeSpec, PipelineTemplate, PlanningError,
                                   StageSpec, coverable, generate_node_spec)
 
 __all__ = [
+    "AdaptationError", "AdaptCostModel", "AdaptCostRow", "AdaptPlan",
     "BatchPlan", "distribute_batch", "distribute_microbatches",
     "LayerCost", "ModelProfile", "build_profile",
     "EngineConfig", "OobleckEngine",

@@ -28,14 +28,16 @@ import dataclasses
 import time as _time
 from typing import Callable, Dict, List, Optional, Sequence, Set
 
+from repro.core import adapt as cm_adapt
 from repro.core import cost_model as cm
+from repro.core.adapt import AdaptationError, AdaptCostModel, AdaptPlan
 from repro.core.batch import BatchPlan
 from repro.core.instantiator import InstantiationPlan, choose_plan
 from repro.core.monitor import ClusterEvent, NodeChangeMonitor
 from repro.core.planner import PipelinePlanner, estimate_iteration_time
-from repro.core.reconfigure import (InsufficientReplicasError,
+from repro.core.reconfigure import (CopyTask, InsufficientReplicasError,
                                     PipelineInstance, ReconfigResult,
-                                    Reconfigurator)
+                                    Reconfigurator, _layer_state_bytes)
 from repro.core import sync as cm_sync
 from repro.core.sync import SyncBucket, build_sync_plan
 from repro.core.templates import (NodeSpec, PipelineTemplate,
@@ -59,6 +61,15 @@ class EngineConfig:
     # .py): priced by the shared sync cost model AND executed by the
     # bucketed data plane, so modeled and real wire bytes agree
     codec: str = "none"
+    # failure response: "replan" (full reconfiguration, the paper's
+    # default), "adapt" (ReCycle-style microbatch re-routing to
+    # surviving replicas), "spare" (promote parked hot spares into the
+    # dead slots), or "auto" (per-event selection by predicted downtime)
+    recovery_policy: str = "replan"
+    # auto refuses adaptations whose steady-state iteration would exceed
+    # this multiple of the predicted post-replan iteration — forces a
+    # consolidating replan instead of limping on overloaded survivors
+    adapt_max_slowdown: float = 1.5
 
 
 @dataclasses.dataclass
@@ -68,6 +79,8 @@ class EngineMetrics:
     total_copy_bytes: int = 0
     lost_iterations: int = 0
     planning_seconds: float = 0.0
+    adaptations: int = 0
+    spare_promotions: int = 0
 
 
 class OobleckEngine:
@@ -129,6 +142,7 @@ class OobleckEngine:
         # at the next reconfiguration
         self.spare_nodes: List[str] = []
         self.last_reconfig: Optional[ReconfigResult] = None
+        self.last_adaptation: Optional[AdaptPlan] = None
 
     # ------------------------------------------------------------------
     def attach_executor(self, executor):
@@ -221,6 +235,217 @@ class OobleckEngine:
         (paper Fig. 11 'copying overhead') and is charged as the
         max-over-streams transfer makespan of the scheduled data plane."""
         return sum(self.recovery_breakdown(result).values())
+
+    # ------------------------------------------------------------------
+    # adaptive recovery: schedule adaptation, spare promotion and the
+    # per-event policy selector (ReCycle / Chameleon; DESIGN.md §12)
+    # ------------------------------------------------------------------
+    def adapt_cost_model(self) -> AdaptCostModel:
+        """THE pricing of schedule adaptation — shared with the
+        simulator policy and benchmarks/recovery_policy, mirror of
+        ``sync_cost_model()``."""
+        return AdaptCostModel(hw=self.profile.hw)
+
+    def _compute_iteration_seconds(self) -> float:
+        """Compute-only iteration time (no sync tail) — the baseline the
+        adapt cost model's reroute exposure is measured against."""
+        return max((estimate_iteration_time(inst.template, nb)
+                    for inst, nb in zip(self.instances,
+                                        self.batch.num_microbatches)),
+                   default=0.0)
+
+    def _iteration_time_of(self, instances: Sequence[PipelineInstance],
+                           batch: BatchPlan) -> float:
+        """``iteration_time()`` for a HYPOTHETICAL (instances, batch) —
+        used to price candidate recovery outcomes without mutating."""
+        times = [estimate_iteration_time(inst.template, nb)
+                 for inst, nb in zip(instances, batch.num_microbatches)]
+        tail = 0.0
+        if len(instances) > 1:
+            layer_bytes = [l.param_bytes for l in self.profile.layers]
+            plan = build_sync_plan(list(instances), layer_bytes,
+                                   self.config.bucket_cap_bytes)
+            tail = self.sync_cost_model().tail_seconds(
+                plan, self.profile.layer_bwd_seconds())
+        return max(times, default=0.0) + tail
+
+    def adaptation_reference_iteration(self, dead: Set[str]) -> float:
+        """Compute-only iteration estimate of the REPLAN outcome for
+        ``dead`` — the reference an adaptation's reroute exposure is
+        measured against (``reconf.on_failure`` is non-mutating, so this
+        is a dry run).  Falls back to the pre-failure iteration when
+        replan is infeasible."""
+        dead_active = {d for d in dead if d in set(self.nodes)}
+        spares = [n for n in self.spare_nodes if n not in dead]
+        try:
+            res = self.reconf.on_failure(self.instances, dead_active,
+                                         spares=spares)
+            return max((estimate_iteration_time(inst.template, nb)
+                        for inst, nb in zip(res.instances,
+                                            res.batch.num_microbatches)),
+                       default=0.0)
+        except InsufficientReplicasError:
+            return self._compute_iteration_seconds()
+
+    def plan_adaptation(self, dead: Set[str]) -> AdaptPlan:
+        """Count-level ReCycle adaptation for ``dead`` (non-mutating):
+        damaged replicas' microbatches re-route to surviving replicas,
+        damaged replicas' healthy nodes park as hot spares.  Raises
+        ``AdaptationError`` when infeasible (every replica damaged, or
+        the batch cannot redistribute over the survivors)."""
+        t0 = _time.perf_counter()
+        plan = cm_adapt.plan_adaptation(
+            self.instances, self.batch.num_microbatches, sorted(dead),
+            self.config.global_batch, self.config.microbatch)
+        return dataclasses.replace(
+            plan, replan_seconds=_time.perf_counter() - t0)
+
+    def apply_adaptation(self, plan: AdaptPlan, dead: Set[str] = frozenset(),
+                         drained: bool = False) -> AdaptPlan:
+        """Commit an AdaptPlan: swap in the surviving instances and the
+        rebalanced batch; no state moves, no template changes."""
+        self.instances = list(plan.instances)
+        self.batch = plan.batch
+        self.metrics.reconfigurations += 1
+        self.metrics.adaptations += 1
+        if not drained:
+            self.metrics.lost_iterations += 1
+        self.spare_nodes = ([n for n in self.spare_nodes if n not in dead]
+                            + [n for n in plan.parked_nodes
+                               if n not in self.spare_nodes])
+        self.draining -= set(dead)
+        self.last_adaptation = plan
+        return plan
+
+    def plan_spare_promotion(self, dead: Set[str]) -> ReconfigResult:
+        """Hot-spare promotion (non-mutating): every dead slot is filled
+        by a parked spare under the SAME templates — no batch change, no
+        re-instantiation; only the dead slots' layer states are copied
+        from surviving replicas.  Raises ``AdaptationError`` when there
+        are not enough spares or a dead layer has no surviving owner."""
+        t0 = _time.perf_counter()
+        dead_active = sorted(d for d in dead if d in set(self.nodes))
+        spares = [n for n in self.spare_nodes if n not in dead]
+        if len(spares) < len(dead_active):
+            raise AdaptationError(
+                f"spare promotion infeasible: {len(dead_active)} dead "
+                f"slots, {len(spares)} spares")
+        replacement = dict(zip(dead_active, spares))
+        used = list(replacement.values())
+        owners = cm_sync.layer_owner_map(self.instances)
+        copy_plan: List[CopyTask] = []
+        load: Dict[str, int] = {}
+        new_instances: List[PipelineInstance] = []
+        for inst in self.instances:
+            if not (set(inst.nodes) & set(replacement)):
+                new_instances.append(inst)
+                continue
+            new_nodes = [replacement.get(n, n) for n in inst.nodes]
+            for layer in range(inst.template.num_layers):
+                for node in inst.layer_owners(layer):
+                    if node not in replacement:
+                        continue
+                    srcs = sorted(owners[layer] - set(dead_active))
+                    if not srcs:
+                        raise AdaptationError(
+                            f"spare promotion infeasible: layer {layer} "
+                            "has no surviving owner")
+                    src = min(srcs, key=lambda s: (load.get(s, 0), s))
+                    nbytes = _layer_state_bytes(self.profile, layer)
+                    load[src] = load.get(src, 0) + nbytes
+                    copy_plan.append(CopyTask(layer, src, replacement[node],
+                                              nbytes, sources=tuple(srcs)))
+            new_instances.append(PipelineInstance(
+                instance_id=inst.instance_id, template=inst.template,
+                nodes=new_nodes))
+        return ReconfigResult(
+            instances=new_instances, copy_plan=copy_plan, batch=self.batch,
+            spare_nodes=[n for n in spares if n not in used],
+            replan_seconds=_time.perf_counter() - t0)
+
+    def apply_spare_promotion(self, result: ReconfigResult,
+                              dead: Set[str] = frozenset(),
+                              drained: bool = False) -> ReconfigResult:
+        """Commit a spare-promotion plan (same bookkeeping as
+        ``handle_failure``, but templates and batch are untouched)."""
+        self.instances = result.instances
+        self.batch = result.batch
+        self.metrics.reconfigurations += 1
+        self.metrics.spare_promotions += 1
+        self.metrics.total_copy_bytes += result.copy_bytes()
+        if not drained:
+            self.metrics.lost_iterations += 1
+        self.last_reconfig = result
+        self.spare_nodes = list(result.spare_nodes)
+        self.draining -= set(dead)
+        return result
+
+    def predict_recovery(self, dead: Set[str]) -> Dict[str, Dict]:
+        """Price every recovery policy for a failure event WITHOUT
+        mutating engine state (``reconf.on_failure`` and the planners
+        above are all non-mutating).  Per policy: ``feasible``,
+        predicted ``downtime`` (sum of its breakdown), the ``breakdown``
+        itself, and the steady-state ``iteration_s`` afterwards."""
+        dead_active = {d for d in dead if d in set(self.nodes)}
+        preds: Dict[str, Dict] = {}
+        # -- replan: the full reconfiguration path -----------------------
+        spares = [n for n in self.spare_nodes if n not in dead]
+        try:
+            res = self.reconf.on_failure(self.instances, set(dead_active),
+                                         spares=spares)
+            bd = self.recovery_breakdown(res, dead=dead_active)
+            preds["replan"] = {
+                "feasible": True, "downtime": sum(bd.values()),
+                "breakdown": bd,
+                "iteration_s": self._iteration_time_of(res.instances,
+                                                       res.batch)}
+        except InsufficientReplicasError as e:
+            preds["replan"] = {"feasible": False, "reason": str(e)}
+        # -- adapt: ReCycle re-routing ----------------------------------
+        try:
+            plan = self.plan_adaptation(dead_active)
+            bd = self.adapt_cost_model().breakdown(
+                plan, self.adaptation_reference_iteration(dead_active))
+            it = self._iteration_time_of(plan.instances, plan.batch)
+            replan_it = preds["replan"].get("iteration_s")
+            slowdown_ok = (replan_it is None
+                           or it <= self.config.adapt_max_slowdown * replan_it)
+            preds["adapt"] = {
+                "feasible": True, "downtime": sum(bd.values()),
+                "breakdown": bd, "iteration_s": it,
+                "slowdown_ok": slowdown_ok, "plan": plan}
+        except AdaptationError as e:
+            preds["adapt"] = {"feasible": False, "reason": str(e)}
+        # -- spare: hot-spare promotion ---------------------------------
+        try:
+            res = self.plan_spare_promotion(dead_active)
+            bd = self.recovery_breakdown(res, dead=dead_active)
+            preds["spare"] = {
+                "feasible": True, "downtime": sum(bd.values()),
+                "breakdown": bd,
+                "iteration_s": self._iteration_time_of(res.instances,
+                                                       res.batch),
+                "plan": res}
+        except AdaptationError as e:
+            preds["spare"] = {"feasible": False, "reason": str(e)}
+        return preds
+
+    def select_recovery_policy(self, dead: Set[str]) -> Dict:
+        """Chameleon-style per-event choice: the feasible policy with
+        the least predicted downtime; ties break toward the better
+        steady-state iteration time.  Adaptations violating the
+        ``adapt_max_slowdown`` cap are excluded (a consolidating replan
+        also folds parked spares back in)."""
+        preds = self.predict_recovery(dead)
+        candidates = [p for p, d in preds.items()
+                      if d.get("feasible") and d.get("slowdown_ok", True)]
+        if not candidates:
+            chosen = "replan"      # let handle_failure raise/escalate
+        else:
+            chosen = min(candidates,
+                         key=lambda p: (preds[p]["downtime"],
+                                        preds[p]["iteration_s"], p))
+        return {"policy": chosen, "predictions": preds}
 
     # ------------------------------------------------------------------
     def _on_event(self, ev: ClusterEvent) -> None:

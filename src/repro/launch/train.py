@@ -62,6 +62,14 @@ def main(argv=None) -> dict:
     ap.add_argument("--kill-at", type=int, default=-1,
                     help="inject a node failure before this step")
     ap.add_argument("--join-at", type=int, default=-1)
+    ap.add_argument("--recovery-policy", default="replan",
+                    choices=["replan", "adapt", "auto"],
+                    help="failure response: 'replan' reconfigures from "
+                         "templates and copies state from replicas; "
+                         "'adapt' re-routes the damaged replica's "
+                         "microbatches to surviving peers (ReCycle-style, "
+                         "zero copy, zero recompile); 'auto' picks per "
+                         "event by predicted downtime")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--codec", default="none",
@@ -106,7 +114,8 @@ def main(argv=None) -> dict:
     engine = OobleckEngine(profile, nodes, EngineConfig(
         fault_tolerance=args.f, global_batch=args.global_batch,
         microbatch=args.microbatch, gpus_per_node=1, n0_override=args.n0,
-        nodes_per_pod=args.pods, codec=args.codec))
+        nodes_per_pod=args.pods, codec=args.codec,
+        recovery_policy=args.recovery_policy))
     print(f"[plan] templates={list(engine.templates)} "
           f"pipelines={[i.template.num_nodes for i in engine.instances]} "
           f"microbatches={engine.batch.num_microbatches}")
@@ -143,15 +152,25 @@ def main(argv=None) -> dict:
             victim = engine.instances[0].nodes[-1]
             t0 = time.perf_counter()
             info = trainer.recover({victim})
-            xfer = info["transfer"]
-            print(f"[fail] killed {victim}: recovered from replicas in "
-                  f"{time.perf_counter() - t0:.2f}s "
-                  f"(copied {info['copied_bytes'] / 1e6:.0f}MB of state over "
-                  f"{xfer['streams']} streams, "
-                  f"{xfer['pod_local_fraction']:.0%} pod-local, modeled "
-                  f"transfer {xfer['seconds'] * 1e3:.1f}ms on target hw, "
-                  f"program cache: {info['cache']}), "
-                  f"pipelines={[i.template.num_nodes for i in engine.instances]}")
+            wall = time.perf_counter() - t0
+            if info["policy"] == "adapt":
+                bd = info["breakdown"]
+                print(f"[fail] killed {victim}: adapted schedule in "
+                      f"{wall:.2f}s (zero state copied, re-routed "
+                      f"microbatches to {info['num_pipelines']} surviving "
+                      f"pipelines, parked {info['parked_nodes']} as spares, "
+                      f"modeled reroute exposure {bd['reroute'] * 1e3:.1f}ms "
+                      f"on target hw, program cache: {info['cache']})")
+            else:
+                xfer = info["transfer"]
+                print(f"[fail] killed {victim}: recovered from replicas in "
+                      f"{wall:.2f}s ({info['policy']}; "
+                      f"copied {info['copied_bytes'] / 1e6:.0f}MB of state over "
+                      f"{xfer['streams']} streams, "
+                      f"{xfer['pod_local_fraction']:.0%} pod-local, modeled "
+                      f"transfer {xfer['seconds'] * 1e3:.1f}ms on target hw, "
+                      f"program cache: {info['cache']}), "
+                      f"pipelines={[i.template.num_nodes for i in engine.instances]}")
         if step == args.join_at:
             raise SystemExit("join-at requires the elastic example; see "
                              "examples/spot_trace_replay.py")

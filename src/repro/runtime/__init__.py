@@ -3,8 +3,10 @@ from repro.runtime.executor import (Executor, ExecutorUnsupported,
                                     track_compiles, track_host_transfers,
                                     tree_spec)
 from repro.runtime.pipeline import HeteroTrainer, split_into_layers
-from repro.runtime.schedule import (ScheduleError, flat_schedule,
-                                    one_f_one_b, simulate_makespan)
+from repro.runtime.schedule import (ScheduleError, adapt_reroute,
+                                    adapted_flat_schedule, adapted_per_stage,
+                                    flat_schedule, one_f_one_b,
+                                    simulate_makespan)
 from repro.runtime.sharding import ShardingStrategy
 from repro.runtime import spmd
 from repro.runtime.spmd import SPMDExecutor
@@ -16,7 +18,8 @@ from repro.runtime.transfer import (Topology, TransferPlan, TransferPlanError,
 __all__ = ["Executor", "ExecutorUnsupported", "ProgramCache",
            "template_signature", "track_compiles", "track_host_transfers",
            "tree_spec", "HeteroTrainer", "split_into_layers",
-           "ScheduleError", "flat_schedule", "one_f_one_b",
+           "ScheduleError", "adapt_reroute", "adapted_flat_schedule",
+           "adapted_per_stage", "flat_schedule", "one_f_one_b",
            "simulate_makespan",
            "ShardingStrategy", "spmd", "SPMDExecutor", "BucketedSync",
            "BucketExec", "perlayer_global_sumsq", "perlayer_sync",

@@ -49,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.adapt import AdaptationError
 from repro.core.engine import OobleckEngine
 from repro.kernels import ops as kops
 from repro.core.reconfigure import PipelineInstance
@@ -646,11 +647,69 @@ class HeteroTrainer(Executor):
                               "transfer": stats["seconds"],
                               "compile": 0.0}}
 
-    def handle_failure(self, dead_nodes: set, drained: bool = False) -> Dict:
+    def _apply_adaptation(self, plan, dead: Set[str],
+                          drained: bool = False) -> Dict:
+        """Commit a ReCycle adaptation: drop the damaged replicas' runs,
+        keep the survivors' layer states untouched (every replica holds
+        the full model, so re-routed microbatches compute the same math
+        on the host), and rebind — programs for the survivors' new
+        microbatch counts are already warm, so this is copy-free AND
+        compile-free."""
+        # price the reroute exposure against the replan alternative
+        ref_iter = self.engine.adaptation_reference_iteration(dead)
+        breakdown = self.engine.adapt_cost_model().breakdown(plan, ref_iter)
+        kept = {id(inst) for inst in plan.instances}
+        self.engine.apply_adaptation(plan, dead=dead, drained=drained)
+        self.runs = [run for run in self.runs if id(run.instance) in kept]
+        self.bind()        # pure cache lookups after warm_templates()
+        return {"policy": "adapt", "copied_bytes": 0,
+                "num_pipelines": len(self.runs),
+                "parked_nodes": list(plan.parked_nodes),
+                "cache": self.cache.stats.as_dict(),
+                "breakdown": breakdown}
+
+    def handle_failure(self, dead_nodes: set, drained: bool = False,
+                       policy: Optional[str] = None) -> Dict:
+        """Route a failure event through the configured recovery policy
+        (engine config's ``recovery_policy`` unless overridden).  "auto"
+        selects per event from predicted downtime; "adapt"/"spare" fall
+        back to the full replan path when infeasible."""
         dead = set(dead_nodes)
+        policy = policy or getattr(self.engine.config,
+                                   "recovery_policy", "replan")
+        decision = None
+        if policy == "auto":
+            decision = self.engine.select_recovery_policy(dead)
+            policy = decision["policy"]
+        if policy == "adapt":
+            try:
+                plan = self.engine.plan_adaptation(dead)
+                info = self._apply_adaptation(plan, dead, drained=drained)
+                if decision is not None:
+                    info["decision"] = decision["policy"]
+                return info
+            except AdaptationError:
+                policy = "replan"
+        if policy == "spare":
+            try:
+                result = self.engine.plan_spare_promotion(dead)
+                by_node = self._states_by_node(exclude=dead)
+                self.engine.apply_spare_promotion(result, dead=dead,
+                                                  drained=drained)
+                info = self._apply_transfer_plan(result, by_node, dead)
+                info["policy"] = "spare"
+                if decision is not None:
+                    info["decision"] = decision["policy"]
+                return info
+            except AdaptationError:
+                policy = "replan"
         by_node = self._states_by_node(exclude=dead)
         result = self.engine.handle_failure(dead, drained=drained)
-        return self._apply_transfer_plan(result, by_node, dead)
+        info = self._apply_transfer_plan(result, by_node, dead)
+        info["policy"] = "replan"
+        if decision is not None:
+            info["decision"] = decision["policy"]
+        return info
 
     def handle_join(self, new_nodes: list) -> Dict:
         """Elastic scale-up: re-plan globally over the larger cluster and

@@ -6,12 +6,24 @@ drain of backwards.  ``simulate_makespan`` runs the dependency-driven
 event simulation for arbitrary per-stage F/B times — used (a) to check
 the planner's T1+T2+T3 critical-path estimate, (b) by the discrete-event
 simulator to time heterogeneous pipelines.
+
+The *adapted* mode (ReCycle, arXiv:2405.14009) re-routes a damaged
+pipeline's microbatches to surviving peer data-parallel pipelines:
+every pipeline replica holds the full model, so a guest microbatch is
+just an extra (F, B) pair filling the host's decoupled-1F1B bubbles.
+``adapt_reroute`` picks the hosts, ``adapted_per_stage`` builds the
+per-host op sequences over (pipeline, mb) tagged microbatches, and
+``adapted_flat_schedule`` serializes them through the same
+dependency validator as ``flat_schedule``.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 Op = Tuple[str, int]          # ("F"|"B", microbatch index)
+# Adapted-mode ops tag each microbatch with its source pipeline so a
+# host can interleave native and guest work: ("F"|"B", (src_pipe, mb)).
+TaggedOp = Tuple[str, Tuple[int, int]]
 
 
 class ScheduleError(RuntimeError):
@@ -79,6 +91,89 @@ def flat_schedule(num_stages: int, num_microbatches: int,
             raise ScheduleError(
                 f"schedule cannot progress after {len(out)}/{total} ops; "
                 f"stuck head ops (stage, op, mb): {stuck}")
+    return out
+
+
+def adapt_reroute(mb_counts: Sequence[int],
+                  dead_pipelines: Set[int]) -> Dict[int, List[Tuple[int, int]]]:
+    """Assign every microbatch of each dead pipeline to a surviving host.
+
+    Returns {host_pipeline: [(src_pipeline, mb), ...]} covering exactly
+    the dead pipelines' microbatches.  Assignment is deterministic and
+    balanced: each guest microbatch goes to the survivor with the least
+    total load (native + already-assigned guests), ties broken by
+    pipeline index, so replayed failures re-route identically.
+    """
+    for p in dead_pipelines:
+        if not 0 <= p < len(mb_counts):
+            raise ScheduleError(f"dead pipeline {p} out of range "
+                                f"(have {len(mb_counts)} pipelines)")
+    survivors = [p for p in range(len(mb_counts)) if p not in dead_pipelines]
+    if not survivors:
+        raise ScheduleError("adaptation infeasible: no surviving pipeline "
+                            f"to host re-routed microbatches (dead="
+                            f"{sorted(dead_pipelines)})")
+    load = {p: mb_counts[p] for p in survivors}
+    routes: Dict[int, List[Tuple[int, int]]] = {p: [] for p in survivors}
+    for src in sorted(dead_pipelines):
+        for mb in range(mb_counts[src]):
+            host = min(survivors, key=lambda p: (load[p], p))
+            routes[host].append((src, mb))
+            load[host] += 1
+    return {p: r for p, r in routes.items() if r}
+
+
+def adapted_per_stage(num_stages: int, mb_counts: Sequence[int],
+                      dead_pipelines: Set[int]
+                      ) -> Dict[int, List[List[TaggedOp]]]:
+    """Per-stage op sequences for every surviving pipeline after
+    re-routing dead pipelines' microbatches (decoupled 1F1B
+    bubble-filling: guests are appended to the host's microbatch stream,
+    so they fill the drain-phase bubbles of the host's own schedule).
+
+    Returns {host_pipeline: per_stage ops} where each op is
+    ("F"|"B", (src_pipeline, mb)).  Native microbatches keep their own
+    pipeline tag; a host with G guests runs one_f_one_b(S, M_host + G)
+    with the tail G slots relabeled to the guests in route order.
+    """
+    routes = adapt_reroute(mb_counts, dead_pipelines)
+    out: Dict[int, List[List[TaggedOp]]] = {}
+    for host in range(len(mb_counts)):
+        if host in dead_pipelines:
+            continue
+        guests = routes.get(host, [])
+        native = mb_counts[host]
+        # slot i < native → native mb i; slot native+j → guest j
+        tags = ([(host, i) for i in range(native)] + list(guests))
+        base = one_f_one_b(num_stages, native + len(guests))
+        out[host] = [[(op, tags[mb]) for op, mb in ops] for ops in base]
+    return out
+
+
+def adapted_flat_schedule(num_stages: int, mb_counts: Sequence[int],
+                          dead_pipelines: Set[int]
+                          ) -> Dict[int, List[Tuple[int, str, Tuple[int, int]]]]:
+    """Serialized adapted schedule per surviving pipeline:
+    {host: [(stage, op, (src_pipeline, mb)), ...]}.
+
+    Each host is serialized through ``flat_schedule``'s dependency
+    validator (guest microbatches obey the same F-before-B,
+    upstream-before-downstream rules as native ones), so a malformed
+    adaptation raises ``ScheduleError`` instead of hanging.
+    """
+    per_host = adapted_per_stage(num_stages, mb_counts, dead_pipelines)
+    out: Dict[int, List[Tuple[int, str, Tuple[int, int]]]] = {}
+    for host, tagged in per_host.items():
+        # flat_schedule validates over dense int mb ids; map tags to ids
+        # and back so host-level dependency checking is reused verbatim.
+        ids: Dict[Tuple[int, int], int] = {}
+        for ops in tagged:
+            for _, tag in ops:
+                ids.setdefault(tag, len(ids))
+        dense = [[(op, ids[tag]) for op, tag in ops] for ops in tagged]
+        rev = {i: tag for tag, i in ids.items()}
+        flat = flat_schedule(num_stages, len(ids), per_stage=dense)
+        out[host] = [(s, op, rev[i]) for s, op, i in flat]
     return out
 
 

@@ -29,6 +29,7 @@ import math
 from typing import Dict, List, Optional, Set
 
 from repro.core import cost_model as cm
+from repro.core.adapt import AdaptationError
 from repro.core.engine import EngineConfig, OobleckEngine
 from repro.core.monitor import NodeChangeMonitor
 from repro.core.planner import PipelinePlanner, estimate_iteration_time
@@ -47,6 +48,8 @@ class PolicyStats:
     reconfigurations: int = 0
     restarts: int = 0
     oom: bool = False
+    adaptations: int = 0
+    spare_promotions: int = 0
 
 
 class Policy:
@@ -104,20 +107,25 @@ class OobleckPolicy(Policy, Executor):
                  f: int, global_batch: int, microbatch: int,
                  n0: Optional[int] = None, max_stages: Optional[int] = None,
                  topology=None, nodes_per_pod: int = 8,
-                 codec: str = "none"):
+                 codec: str = "none", recovery_policy: str = "replan"):
         self.profile = profile
         self.stats = PolicyStats()
         self.sim_step = 0
         #: recovery-latency decomposition of the last failure/join
-        #: (replan / transfer / compile / barrier seconds)
+        #: (replan / transfer / compile / barrier seconds; adaptations
+        #: add a ``reroute`` exposure leg instead of transfer)
         self.last_breakdown: Optional[Dict[str, float]] = None
+        #: audit log of per-event policy choices: (sim_step, chosen,
+        #: predicted downtimes per feasible policy)
+        self.decisions: List[Dict] = []
         n0 = n0 or profile.min_nodes(1)
         self.engine = OobleckEngine(
             profile, nodes,
             EngineConfig(fault_tolerance=f, global_batch=global_batch,
                          microbatch=microbatch, gpus_per_node=1,
                          n0_override=n0, max_stages=max_stages,
-                         nodes_per_pod=nodes_per_pod, codec=codec),
+                         nodes_per_pod=nodes_per_pod, codec=codec,
+                         recovery_policy=recovery_policy),
             topology=topology)
         self.engine.attach_executor(self)
 
@@ -190,6 +198,39 @@ class OobleckPolicy(Policy, Executor):
             # back into a pipeline, but no reconfiguration happens
             self.engine.handle_failure(dead, drained=drained)
             return 0.0
+        policy = getattr(self.engine.config, "recovery_policy", "replan")
+        predictions = None
+        if policy == "auto":
+            sel = self.engine.select_recovery_policy(dead)
+            policy, predictions = sel["policy"], sel["predictions"]
+        if policy == "adapt":
+            try:
+                # exposure is priced against the replan alternative
+                ref_iter = self.engine.adaptation_reference_iteration(dead)
+                plan = self.engine.plan_adaptation(dead)
+                self.engine.apply_adaptation(plan, dead=dead,
+                                             drained=drained)
+                self.stats.reconfigurations += 1
+                self.stats.adaptations += 1
+                self.last_breakdown = self.engine.adapt_cost_model(
+                    ).breakdown(plan, ref_iter)
+                self._log_decision("adapt", predictions)
+                return sum(self.last_breakdown.values())
+            except AdaptationError:
+                policy = "replan"
+        if policy == "spare":
+            try:
+                result = self.engine.plan_spare_promotion(dead)
+                self.engine.apply_spare_promotion(result, dead=dead,
+                                                  drained=drained)
+                self.stats.reconfigurations += 1
+                self.stats.spare_promotions += 1
+                self.last_breakdown = self.engine.recovery_breakdown(
+                    result, dead=dead)
+                self._log_decision("spare", predictions)
+                return sum(self.last_breakdown.values())
+            except AdaptationError:
+                policy = "replan"
         try:
             result = self.engine.handle_failure(dead, drained=drained)
         except InsufficientReplicasError:
@@ -199,7 +240,16 @@ class OobleckPolicy(Policy, Executor):
         self.stats.reconfigurations += 1
         self.last_breakdown = self.engine.recovery_breakdown(result,
                                                              dead=dead)
+        self._log_decision("replan", predictions)
         return sum(self.last_breakdown.values())
+
+    def _log_decision(self, chosen: str, predictions) -> None:
+        if predictions is None:     # fixed policy, nothing was compared
+            return
+        self.decisions.append({
+            "sim_step": self.sim_step, "chosen": chosen,
+            "predicted": {p: d["downtime"] for p, d in predictions.items()
+                          if d.get("feasible")}})
 
     def on_join(self, nodes: List[str]) -> float:
         try:

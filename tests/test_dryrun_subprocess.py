@@ -56,12 +56,16 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
+# slow container / CI runners can override the subprocess budget
+TIMEOUT = int(os.environ.get("REPRO_DRYRUN_TIMEOUT", "600"))
+
+
 def run(arch, kind):
     env = dict(os.environ, PYTHONPATH=SRC)
     env.pop("XLA_FLAGS", None)
     out = subprocess.run([sys.executable, "-c", SCRIPT, arch, kind],
                          capture_output=True, text=True, env=env,
-                         timeout=600)
+                         timeout=TIMEOUT)
     assert out.returncode == 0, out.stderr[-2000:]
     return json.loads(out.stdout.strip().splitlines()[-1])
 
@@ -82,3 +86,26 @@ def test_mini_dryrun_compiles_and_counts(arch, kind):
     # parser deliberately ignores — carry more relative weight there.
     floor = 0.9 if kind == "train" else 0.6
     assert r["flops"] >= floor * r["xla_flops"]
+
+
+# ----------------------------------------------------------------------
+# the resilient-training driver, per recovery policy, in a subprocess
+# (mirrors the README quickstart: tiny model, kill a node mid-run)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ["replan", "adapt", "auto"])
+def test_train_driver_recovers_under_each_policy(policy):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train",
+         "--nodes", "9", "--n0", "2", "--f", "1",
+         "--global-batch", "12", "--microbatch", "2", "--seq-len", "16",
+         "--layers", "2", "--steps", "4", "--kill-at", "1", "--no-warm",
+         "--recovery-policy", policy],
+        capture_output=True, text=True, env=env, timeout=TIMEOUT)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "[fail] killed" in out.stdout
+    assert "[done]" in out.stdout
+    if policy == "adapt":
+        assert "adapted schedule" in out.stdout
+        assert "zero state copied" in out.stdout

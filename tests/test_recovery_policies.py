@@ -1,0 +1,367 @@
+"""Recovery-equivalence suite for the adaptive recovery subsystem
+(DESIGN.md §12): ReCycle-style schedule adaptation, hot-spare promotion
+and the per-event ``auto`` selector.
+
+The headline guarantee this locks down: for whole-pipeline failures the
+adaptation re-routes the dead replica's microbatches through the SAME
+``distribute_batch`` a replan would run, so (instances, batch) are
+structurally identical under both policies — training under the adapted
+schedule is BITWISE identical to a full replan on the surviving data,
+while copying zero bytes and compiling nothing.  And the ``auto``
+selector never picks a policy whose predicted downtime exceeds the best
+actually-measured one.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.core import (AdaptationError, EngineConfig, OobleckEngine,
+                        build_profile, verify_replica_coverage)
+from repro.data import GlobalBatchDispenser, SyntheticLM
+from repro.models import Model
+from repro.optim import adamw
+from repro.runtime import HeteroTrainer, track_compiles
+from repro.sim import (OobleckPolicy, rack_failure_bursts, run_sim,
+                       scale_cycle, spot_preemption_wave)
+
+RNG = jax.random.PRNGKey(11)
+GB, MB, SEQ = 12, 2, 16
+
+
+# ----------------------------------------------------------------------
+# engine-level helpers (analytic only — no JAX arrays)
+# ----------------------------------------------------------------------
+def _profile(layers=18, mb=2, seq=256):
+    arch = dataclasses.replace(get_arch("gpt2"), name=f"gpt2_L{layers}",
+                               num_layers=layers)
+    return build_profile(arch, microbatch=mb, seq_len=seq)
+
+
+def make_engine(n_nodes, f=1, n0=4, gb=1024, mb=2, layers=18,
+                policy="replan", spares=()):
+    eng = OobleckEngine(
+        _profile(layers), [f"node{i:03d}" for i in range(n_nodes)],
+        EngineConfig(fault_tolerance=f, global_batch=gb, microbatch=mb,
+                     gpus_per_node=1, n0_override=n0,
+                     recovery_policy=policy))
+    eng.spare_nodes = list(spares)
+    return eng
+
+
+# ----------------------------------------------------------------------
+# trainer-level helpers (the validated 9-node / n0=2 / f=1 config:
+# three 3-node pipelines; killing one leaves 6 >= (f+1)*n0 = 4 nodes)
+# ----------------------------------------------------------------------
+def make_trainer(policy):
+    arch = reduced(get_arch("gpt3_medium"), layers=2)
+    model = Model(arch, dtype=jnp.float32, remat=False, attn_impl="naive",
+                  scan_layers=False)
+    params = model.init(RNG)
+    profile = build_profile(arch, microbatch=MB, seq_len=SEQ)
+    engine = OobleckEngine(
+        profile, [f"n{i}" for i in range(9)],
+        EngineConfig(fault_tolerance=1, global_batch=GB, microbatch=MB,
+                     gpus_per_node=1, n0_override=2,
+                     recovery_policy=policy))
+    trainer = HeteroTrainer(model, engine, params, opt_cfg=adamw.AdamWConfig(
+        lr=1e-3, warmup_steps=0, clip_norm=1.0, weight_decay=0.0))
+    return arch, engine, trainer
+
+
+def microbatches(batch, mb_size):
+    n = batch["tokens"].shape[0] // mb_size
+    return [{k: v[i * mb_size:(i + 1) * mb_size] for k, v in batch.items()
+             if not k.startswith("_")} for i in range(n)]
+
+
+def drive(trainer, disp):
+    sizes = trainer.engine.batch.minibatch_sizes()
+    batches = disp.next_step(sizes)
+    return trainer.train_step([microbatches(b, MB) for b in batches])
+
+
+# ----------------------------------------------------------------------
+# 1. bitwise equivalence: adapted schedule vs full replan
+# ----------------------------------------------------------------------
+def test_adapt_bitwise_equals_replan_and_is_copy_compile_free():
+    """Twin trainers on identical params/data.  A whole pipeline dies;
+    one recovers by replan, the other by schedule adaptation.  Losses
+    and the full parameter trees must stay EXACTLY equal (not approx —
+    the adapted batch distribution is the replan's), the adaptation
+    must copy zero bytes, and — after warm_templates() — fire zero XLA
+    compiles from failure to the next completed step."""
+    _, eng_a, tr_a = make_trainer("replan")
+    arch, eng_b, tr_b = make_trainer("adapt")
+    assert [i.nodes for i in eng_a.instances] == \
+        [i.nodes for i in eng_b.instances]
+
+    # reachable counts for THIS scenario: (2,2,2) before, (3,3) after
+    tr_b.warm_templates(mb_counts=[2, 3])
+    disp_a = GlobalBatchDispenser(SyntheticLM(arch.vocab_size, SEQ, seed=5))
+    disp_b = GlobalBatchDispenser(SyntheticLM(arch.vocab_size, SEQ, seed=5))
+
+    out_a, out_b = drive(tr_a, disp_a), drive(tr_b, disp_b)
+    assert float(out_a["loss"]) == float(out_b["loss"])
+
+    victims = set(eng_a.instances[0].nodes)
+    info_a = tr_a.handle_failure(set(victims))
+    with track_compiles() as log:
+        info_b = tr_b.handle_failure(set(victims))
+        out_b = drive(tr_b, disp_b)
+        jnp.asarray(out_b["loss"]).block_until_ready()
+    assert log.backend_compiles == 0, \
+        f"{log.backend_compiles} XLA compiles during adapt->step"
+
+    assert info_a["policy"] == "replan"
+    assert info_b["policy"] == "adapt"
+    assert info_b["copied_bytes"] == 0
+    assert info_b["breakdown"]["transfer"] == 0.0
+    assert info_b["breakdown"]["compile"] == 0.0
+    # whole-pipeline kill: adapt == replan structurally => zero exposure
+    assert info_b["breakdown"]["reroute"] == 0.0
+    assert [i.nodes for i in eng_a.instances] == \
+        [i.nodes for i in eng_b.instances]
+    assert eng_a.batch.num_microbatches == eng_b.batch.num_microbatches
+
+    out_a = drive(tr_a, disp_a)
+    assert float(out_a["loss"]) == float(out_b["loss"])
+    out_a, out_b = drive(tr_a, disp_a), drive(tr_b, disp_b)
+    assert float(out_a["loss"]) == float(out_b["loss"])
+
+    got_a, got_b = tr_a.full_params(), tr_b.full_params()
+    for a, b in zip(jax.tree.leaves(got_a), jax.tree.leaves(got_b)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert tr_b.replica_divergence() < 1e-6
+    assert eng_b.metrics.adaptations == 1
+
+
+# ----------------------------------------------------------------------
+# 2. structural identity at the plan level (fast, analytic)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("n_nodes,n0,gb", [(12, 4, 256), (24, 4, 1024)])
+def test_whole_pipeline_kill_adapt_structurally_equals_replan(n_nodes, n0, gb):
+    eng_a = make_engine(n_nodes, f=1, n0=n0, gb=gb)
+    eng_b = make_engine(n_nodes, f=1, n0=n0, gb=gb)
+    dead = set(eng_b.instances[0].nodes)
+
+    ref_iter = eng_b.adaptation_reference_iteration(dead)
+    plan = eng_b.plan_adaptation(dead)
+    eng_b.apply_adaptation(plan, dead=dead)
+    eng_a.handle_failure(set(dead))
+
+    assert [i.nodes for i in eng_a.instances] == \
+        [i.nodes for i in eng_b.instances]
+    assert eng_a.batch.num_microbatches == eng_b.batch.num_microbatches
+    assert verify_replica_coverage(eng_b.instances)
+    assert plan.parked_nodes == ()          # the whole replica died
+    bd = eng_b.adapt_cost_model().breakdown(plan, ref_iter)
+    assert bd["reroute"] == 0.0
+    assert bd["transfer"] == 0.0 and bd["compile"] == 0.0
+
+
+def test_partial_kill_parks_survivors_and_reroutes_guests():
+    eng = make_engine(12, f=1, n0=4, gb=256)
+    inst = eng.instances[0]
+    victim = inst.nodes[-1]
+    plan = eng.plan_adaptation({victim})
+    # the damaged replica's healthy nodes park as hot spares
+    assert set(plan.parked_nodes) == set(inst.nodes) - {victim}
+    assert plan.total_guests > 0
+    assert sum(plan.mb_after) * eng.config.microbatch == 256
+    eng.apply_adaptation(plan, dead={victim})
+    assert set(plan.parked_nodes) <= set(eng.spare_nodes)
+    assert victim not in eng.nodes
+
+
+# ----------------------------------------------------------------------
+# 3. the auto selector vs MEASURED per-policy downtime
+# ----------------------------------------------------------------------
+def _measure_all(dead, spares):
+    """Actually run every feasible policy on identically-constructed
+    engines and return its measured downtime."""
+    measured = {}
+    eng = make_engine(24, spares=spares)
+    try:
+        res = eng.handle_failure(set(dead))
+        measured["replan"] = sum(
+            eng.recovery_breakdown(res, dead=set(dead)).values())
+    except Exception:
+        pass
+    eng = make_engine(24, spares=spares)
+    try:
+        ref = eng.adaptation_reference_iteration(set(dead))
+        plan = eng.plan_adaptation(set(dead))
+        eng.apply_adaptation(plan, dead=set(dead))
+        measured["adapt"] = eng.adapt_cost_model().downtime_seconds(plan, ref)
+    except AdaptationError:
+        pass
+    eng = make_engine(24, spares=spares)
+    try:
+        res = eng.plan_spare_promotion(set(dead))
+        eng.apply_spare_promotion(res, dead=set(dead))
+        measured["spare"] = sum(
+            eng.recovery_breakdown(res, dead=set(dead)).values())
+    except AdaptationError:
+        pass
+    return measured
+
+
+@pytest.mark.parametrize("kind", ["whole_pipeline", "partial_with_spares",
+                                  "partial_no_spares"])
+def test_auto_never_predicts_worse_than_best_measured(kind):
+    """ISSUE acceptance: for every failure event, the policy auto picks
+    must not have a higher predicted downtime than the BEST downtime
+    actually measured across all feasible policies (0.05 s tolerance
+    covers the wall-clock jitter of the measured replan leg)."""
+    spares = ("spareA", "spareB") if kind == "partial_with_spares" else ()
+    eng = make_engine(24, spares=spares)
+    if kind == "whole_pipeline":
+        dead = set(eng.instances[0].nodes)
+    else:
+        dead = {eng.instances[0].nodes[-1], eng.instances[1].nodes[-1]}
+    sel = eng.select_recovery_policy(dead)
+    chosen, preds = sel["policy"], sel["predictions"]
+    assert preds[chosen]["feasible"]
+    measured = _measure_all(dead, spares)
+    assert measured, "no policy could handle the event"
+    # an adaptation vetoed by the slowdown cap is excluded from "best":
+    # the veto is a steady-state throughput constraint, not a downtime
+    # misprediction — auto may not choose it at any downtime
+    eligible = {p: m for p, m in measured.items()
+                if p != "adapt" or preds["adapt"].get("slowdown_ok", True)}
+    best = min(eligible.values())
+    assert preds[chosen]["downtime"] <= best + 0.05, \
+        (chosen, preds[chosen]["downtime"], measured)
+
+
+def test_auto_prefers_adapt_for_whole_pipeline_kill():
+    """Exposure is zero and no state moves: adaptation strictly
+    dominates a replan for a whole-replica death."""
+    eng = make_engine(24)
+    dead = set(eng.instances[0].nodes)
+    sel = eng.select_recovery_policy(dead)
+    assert sel["policy"] == "adapt"
+    assert sel["predictions"]["adapt"]["downtime"] < \
+        sel["predictions"]["replan"]["downtime"]
+
+
+def test_slowdown_cap_vetoes_overloaded_adaptation():
+    """With the cap at ~1x, any adaptation that slows the iteration past
+    the replan outcome is excluded and auto degrades to replan/spare."""
+    eng = make_engine(24)
+    eng.config.adapt_max_slowdown = 1.0
+    # partial kill: survivors absorb guests -> iteration grows
+    dead = {eng.instances[0].nodes[-1]}
+    preds = eng.predict_recovery(dead)
+    if preds["adapt"]["feasible"] and not preds["adapt"]["slowdown_ok"]:
+        assert eng.select_recovery_policy(dead)["policy"] != "adapt"
+
+
+# ----------------------------------------------------------------------
+# 4. per-family simulation: auto's decision log is self-consistent
+# ----------------------------------------------------------------------
+NODES = [f"n{i:03d}" for i in range(24)]
+FAMILIES = {
+    "rack_bursts": lambda: rack_failure_bursts(
+        NODES, rack_size=4, horizon=40_000.0, mean_interval=4000.0,
+        seed=3, min_alive=12),
+    "preemption_wave": lambda: spot_preemption_wave(
+        NODES, horizon=40_000.0, mean_wave=5000.0, wave_frac=0.15,
+        grace=120.0, seed=7, min_alive=12),
+    "scale_cycle": lambda: scale_cycle(
+        NODES, horizon=40_000.0, period=8000.0, step=4, lo=16, hi=24),
+}
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_auto_decision_log_per_family(family):
+    pol = OobleckPolicy(_profile(), NODES, f=1, global_batch=1024,
+                        microbatch=2, n0=4, recovery_policy="auto")
+    events = FAMILIES[family]()
+    assert any(e.kind == "fail" for e in events)
+    res = run_sim(pol, events, horizon=40_000.0, global_batch=1024,
+                  min_nodes=12)
+    assert res.stopped_reason is None
+    assert res.events_handled > 0
+    assert pol.decisions, "auto handled failures but logged no decisions"
+    for d in pol.decisions:
+        assert d["chosen"] in d["predicted"]
+        # auto only deviates from replan when the prediction says the
+        # alternative is at least as cheap (slowdown vetoes can force
+        # replan even when adapt predicts cheaper — never the reverse)
+        if d["chosen"] != "replan" and "replan" in d["predicted"]:
+            assert (d["predicted"][d["chosen"]]
+                    <= d["predicted"]["replan"] + 1e-9), d
+    assert pol.stats.adaptations == \
+        sum(d["chosen"] == "adapt" for d in pol.decisions)
+    assert pol.stats.spare_promotions == \
+        sum(d["chosen"] == "spare" for d in pol.decisions)
+
+
+def test_fixed_policies_log_no_decisions():
+    pol = OobleckPolicy(_profile(), NODES, f=1, global_batch=1024,
+                        microbatch=2, n0=4, recovery_policy="adapt")
+    pol.on_failure(set(pol.engine.instances[0].nodes))
+    assert pol.stats.adaptations == 1
+    assert pol.decisions == []      # nothing was compared
+
+
+# ----------------------------------------------------------------------
+# 5. infeasibility: errors, not hangs or crashes
+# ----------------------------------------------------------------------
+def test_adapt_infeasible_when_every_replica_damaged():
+    eng = make_engine(24)
+    dead = {inst.nodes[-1] for inst in eng.instances}
+    with pytest.raises(AdaptationError):
+        eng.plan_adaptation(dead)
+
+
+def test_adapt_policy_falls_back_to_replan_when_infeasible():
+    pol = OobleckPolicy(_profile(), NODES, f=1, global_batch=1024,
+                        microbatch=2, n0=4, recovery_policy="adapt")
+    # damage EVERY replica (adapt infeasible) but at a different stage
+    # position each, so every layer keeps a surviving owner and the
+    # replan fallback can still recover
+    dead = {inst.nodes[i] for i, inst in enumerate(pol.engine.instances)}
+    seconds = pol.on_failure(dead)
+    assert seconds > 0.0
+    assert pol.stats.adaptations == 0
+    assert pol.stats.reconfigurations == 1      # the replan fallback
+    assert "transfer" in pol.last_breakdown
+    assert not (dead & set(pol.engine.nodes))
+
+
+# ----------------------------------------------------------------------
+# 6. hot-spare promotion
+# ----------------------------------------------------------------------
+def test_spare_promotion_fills_dead_slot_without_replanning():
+    eng = make_engine(24, spares=("spareA", "spareB"))
+    before = [i.template for i in eng.instances]
+    batch_before = eng.batch
+    victim = eng.instances[0].nodes[-1]
+    result = eng.plan_spare_promotion({victim})
+    assert result.batch is batch_before          # batch untouched
+    assert [i.template for i in result.instances] == before
+    flat = [n for i in result.instances for n in i.nodes]
+    assert victim not in flat and "spareA" in flat
+    assert result.spare_nodes == ["spareB"]
+    # every copied layer lands on the promoted spare, sourced from a
+    # surviving owner
+    assert result.copy_plan
+    for task in result.copy_plan:
+        assert task.dst_node == "spareA"
+        assert task.src_node != victim
+    eng.apply_spare_promotion(result, dead={victim})
+    assert eng.metrics.spare_promotions == 1
+    assert verify_replica_coverage(eng.instances)
+    assert eng.spare_nodes == ["spareB"]
+
+
+def test_spare_promotion_infeasible_without_spares():
+    eng = make_engine(24)
+    with pytest.raises(AdaptationError):
+        eng.plan_spare_promotion({eng.instances[0].nodes[-1]})

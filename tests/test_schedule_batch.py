@@ -9,16 +9,31 @@ they always run):
    counts BIT-IDENTICAL to the retained full-recompute reference,
    including on tie-heavy instances where fp rounding of the two
    objective forms differs.
+
+Plus hypothesis properties (skipped when hypothesis is absent) for the
+ADAPTED schedules (DESIGN.md §12): random (pipelines, stages,
+failure-set) instances must never route a microbatch to a dead
+pipeline, must execute every surviving AND re-routed microbatch's F and
+B exactly once per stage on exactly one host, and must raise
+``ScheduleError`` — never hang — on infeasible inputs.
 """
 import itertools
 import random
 
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
 from repro.core.batch import (_distribute_microbatches_reference, _objective,
                               distribute_microbatches)
 from repro.core.templates import PlanningError
-from repro.runtime.schedule import ScheduleError, flat_schedule, one_f_one_b
+from repro.runtime.schedule import (ScheduleError, adapt_reroute,
+                                    adapted_flat_schedule, adapted_per_stage,
+                                    flat_schedule, one_f_one_b)
 
 
 # ----------------------------------------------------------------------
@@ -123,3 +138,91 @@ def test_bruteforce_optimality_larger_instances():
 def test_infeasible_still_raises():
     with pytest.raises(PlanningError):
         distribute_microbatches([1.0, 1.0, 1.0], 2)
+
+
+# ----------------------------------------------------------------------
+# adapted schedules: deterministic base cases (hypothesis-free)
+# ----------------------------------------------------------------------
+def test_adapt_reroute_balanced_and_deterministic():
+    routes = adapt_reroute([3, 3, 3], {0})
+    assert routes == adapt_reroute([3, 3, 3], {0})
+    hosted = [g for r in routes.values() for g in r]
+    assert sorted(hosted) == [(0, 0), (0, 1), (0, 2)]
+    # balanced: loads 3+2 and 3+1 (or vice versa), never 3+3 and 3+0
+    loads = sorted(3 + len(routes.get(p, [])) for p in (1, 2))
+    assert loads == [4, 5]
+
+
+def test_adapt_reroute_infeasible_raises():
+    with pytest.raises(ScheduleError):
+        adapt_reroute([2, 2], {0, 1})          # no survivor left
+    with pytest.raises(ScheduleError):
+        adapt_reroute([2, 2], {5})             # out of range
+
+
+def test_adapted_schedule_guests_fill_host_tail():
+    """Guests are appended to the host's microbatch stream, so the
+    host's own (native) 1F1B prefix is untouched — the guests ride the
+    drain-phase bubbles."""
+    S, counts = 3, [2, 2]
+    per_host = adapted_per_stage(S, counts, {1})
+    native = one_f_one_b(S, 2)
+    for s in range(S):
+        ops = per_host[0][s]
+        assert len(ops) == 2 * 4               # F+B for 2 native + 2 guests
+        native_positions = [o for o in ops if o[1][0] == 0]
+        assert native_positions == [(op, (0, mb)) for op, mb in native[s]]
+
+
+if HAVE_HYPOTHESIS:
+    @given(num_stages=st.integers(1, 5),
+           mb_counts=st.lists(st.integers(1, 8), min_size=2, max_size=6),
+           data=st.data())
+    @settings(max_examples=120, deadline=None)
+    def test_adapted_schedule_properties(num_stages, mb_counts, data):
+        """Random (pipelines, stages, failure-set <= f = X-1): the
+        adapted schedule must (a) never place an op on a dead pipeline,
+        (b) execute every surviving and re-routed microbatch's F and B
+        exactly once per stage on exactly one host, and (c) cover no
+        other microbatches."""
+        X = len(mb_counts)
+        dead = set(data.draw(
+            st.lists(st.integers(0, X - 1), min_size=1, max_size=X - 1,
+                     unique=True), label="dead"))
+        flat = adapted_flat_schedule(num_stages, mb_counts, dead)
+
+        # (a) ops only run on surviving hosts
+        assert set(flat).isdisjoint(dead)
+        assert set(flat) == set(range(X)) - dead
+
+        # (b)+(c): per-(src,mb) execution counts, and host uniqueness
+        host_of = {}
+        expected = {(p, i) for p in range(X) for i in range(mb_counts[p])}
+        seen = set()
+        for host, ops in flat.items():
+            per_tag = {}
+            for s, op, tag in ops:
+                assert tag in expected
+                assert host_of.setdefault(tag, host) == host, \
+                    f"microbatch {tag} split across hosts"
+                per_tag.setdefault(tag, []).append((s, op))
+                seen.add(tag)
+            for tag, sops in per_tag.items():
+                for s in range(num_stages):
+                    assert sops.count((s, "F")) == 1, (tag, s)
+                    assert sops.count((s, "B")) == 1, (tag, s)
+        assert seen == expected, "a microbatch was lost or invented"
+
+    @given(mb_counts=st.lists(st.integers(1, 8), min_size=1, max_size=6),
+           num_stages=st.integers(1, 5))
+    @settings(max_examples=40, deadline=None)
+    def test_adapted_schedule_infeasible_raises_not_hangs(mb_counts,
+                                                          num_stages):
+        """All pipelines dead, or a dead index out of range: always a
+        ScheduleError, never a hang or partial schedule."""
+        with pytest.raises(ScheduleError):
+            adapted_flat_schedule(num_stages, mb_counts,
+                                  set(range(len(mb_counts))))
+        with pytest.raises(ScheduleError):
+            adapted_flat_schedule(num_stages, mb_counts,
+                                  {len(mb_counts) + 1})
