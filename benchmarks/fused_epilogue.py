@@ -1,0 +1,178 @@
+"""Fused stage-epilogue microbench (DESIGN.md §13).
+
+Times the two fusions the stage hot path routes through kernels/ops.py —
+the residual-add+RMSNorm block epilogue (``ops.fused_add_rmsnorm``) and
+the fused QKV projection (``ops.fused_qkv``) — against the UNFUSED
+reference they replaced: the op-granular formulation, each primitive op
+its own dispatch with intermediates materialized between them, and
+gradients pulled back op by op.  Each cell times the TRAINING PATH
+(forward + backward), because that is what the warmed per-template step
+programs execute; the fused side runs as one compiled program exactly
+as the model does, so the speedup column is the fusion win the block
+epilogue actually banks: one dispatch instead of a dozen, fused
+pointwise epilogues, no op-boundary materialization.  On compiled
+backends the Pallas tiles add an occupancy win on top; the ``lowered``
+column records the probe verdict per cell.
+
+``kernel_roofline`` imports these cells into BENCH_kernels.json, where
+CI gates speedup >= 1.15x at every shape (min-over-repeats).
+
+    PYTHONPATH=src:. python benchmarks/fused_epilogue.py \
+        --json BENCH_fused_epilogue.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Csv
+from repro.kernels.autotune import _time
+
+#: (rows, d_model) — token-rows x width of the block epilogue; includes
+#: a ragged row count (non-block-multiple) on purpose.
+NORM_SHAPES = [(512, 512), (2048, 768), (1027, 640)]
+#: (rows, d_model, q_cols, kv_cols) — GQA-shaped projections (kv < q).
+QKV_SHAPES = [(512, 512, 512, 256), (1024, 768, 768, 256),
+              (777, 512, 384, 192)]
+
+#: the acceptance floor CI gates on (min-over-repeats)
+SPEEDUP_FLOOR = 1.15
+
+
+def _norm_cell(shape, iters: int) -> Dict:
+    from repro.kernels import ops
+    rows, d = shape
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(ks[0], (rows, d))
+    r = jax.random.normal(ks[1], (rows, d))
+    w = jax.random.normal(ks[2], (d,)) * 0.2 + 1.0
+
+    def loss_fused(x, r, w):
+        res, h = ops.fused_add_rmsnorm(x, r, w)
+        return jnp.sum(res) + jnp.sum(h)
+
+    fused = jax.jit(jax.grad(loss_fused, argnums=(0, 1, 2)))
+
+    # op-granular reference: each primitive its own dispatch, VJP
+    # pulled back op by op (what the pre-fusion epilogue paid)
+    add = jax.jit(lambda a, b: a + b)
+    var = jax.jit(lambda t: jnp.mean(t * t, axis=-1, keepdims=True))
+    scale = jax.jit(lambda t, v: t * jax.lax.rsqrt(v + 1e-6))
+    wmul = jax.jit(lambda t, w: t * w)
+
+    def loss_unfused(x, r, w):
+        res = add(x, r)
+        x32 = res.astype(jnp.float32)
+        h = wmul(scale(x32, var(x32)).astype(res.dtype), w)
+        return jnp.sum(res) + jnp.sum(h)
+
+    unfused = jax.grad(loss_unfused, argnums=(0, 1, 2))
+
+    fused_s = _time(fused, x, r, w, iters=iters)
+    unfused_s = _time(unfused, x, r, w, iters=iters)
+    return {
+        "kernel": "fused_add_rmsnorm", "shape": list(shape),
+        "backend": ops.resolve_backend(),
+        "lowered": ops.kernel_lowers("fused_norm"),
+        "fused_s": fused_s, "unfused_s": unfused_s,
+        "fused_speedup": unfused_s / fused_s,
+        # fwd 3 passes over [rows, d] + bwd ~5 (grads for x, r, w)
+        "fused_gbps": 8 * rows * d * 4 / fused_s / 1e9,
+    }
+
+
+def _qkv_cell(shape, iters: int) -> Dict:
+    from repro.kernels import ops
+    rows, d, cq, ckv = shape
+    ks = jax.random.split(jax.random.PRNGKey(1), 7)
+    x = jax.random.normal(ks[0], (1, rows, d))
+    wq = jax.random.normal(ks[1], (d, cq)) * d ** -0.5
+    wk = jax.random.normal(ks[2], (d, ckv)) * d ** -0.5
+    wv = jax.random.normal(ks[3], (d, ckv)) * d ** -0.5
+    bq = jax.random.normal(ks[4], (cq,)) * 0.1
+    bk = jax.random.normal(ks[5], (ckv,)) * 0.1
+    bv = jax.random.normal(ks[6], (ckv,)) * 0.1
+
+    def loss_fused(x, wq, wk, wv):
+        q, k, v = ops.fused_qkv(x, wq, wk, wv, bq, bk, bv)
+        return jnp.sum(q) + jnp.sum(k) + jnp.sum(v)
+
+    fused = jax.jit(jax.grad(loss_fused, argnums=(0, 1, 2, 3)))
+
+    mm = jax.jit(lambda x, w: x @ w)
+    badd = jax.jit(lambda t, b: t + b)
+
+    def loss_unfused(x, wq, wk, wv):
+        q = badd(mm(x, wq), bq)
+        k = badd(mm(x, wk), bk)
+        v = badd(mm(x, wv), bv)
+        return jnp.sum(q) + jnp.sum(k) + jnp.sum(v)
+
+    unfused = jax.grad(loss_unfused, argnums=(0, 1, 2, 3))
+
+    fused_s = _time(fused, x, wq, wk, wv, iters=iters)
+    unfused_s = _time(unfused, x, wq, wk, wv, iters=iters)
+    flops = 3 * 2 * rows * d * (cq + 2 * ckv)        # fwd + ~2x bwd
+    return {
+        "kernel": "fused_qkv", "shape": list(shape),
+        "backend": ops.resolve_backend(),
+        "lowered": ops.kernel_lowers("fused_qkv"),
+        "fused_s": fused_s, "unfused_s": unfused_s,
+        "fused_speedup": unfused_s / fused_s,
+        "fused_gflops": flops / fused_s / 1e9,
+    }
+
+
+def fused_cells(iters: int = 3) -> List[Dict]:
+    cells = [_norm_cell(s, iters) for s in NORM_SHAPES]
+    cells += [_qkv_cell(s, iters) for s in QKV_SHAPES]
+    return cells
+
+
+def report(csv: Csv, cells: List[Dict], check: bool = True) -> None:
+    for c in cells:
+        name = f"fused/{c['kernel']}/" + "x".join(map(str, c["shape"]))
+        csv.add(f"{name}/fused_s", c["fused_s"] * 1e6,
+                f"speedup={c['fused_speedup']:.2f}x")
+        csv.add(f"{name}/unfused_s", c["unfused_s"] * 1e6,
+                f"lowered={c['lowered']}")
+        if check:
+            assert c["fused_speedup"] >= SPEEDUP_FLOOR, (
+                f"fused path below the {SPEEDUP_FLOOR}x floor at {name}: "
+                f"{c['fused_speedup']:.3f}x")
+
+
+def main(csv: Optional[Csv] = None, argv: Optional[List[str]] = None) -> Dict:
+    csv = csv or Csv()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="",
+                    help="write cells to this path (BENCH_fused_epilogue"
+                         ".json)")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--no-check", action="store_true",
+                    help="report without asserting the speedup floor")
+    args = ap.parse_args(argv if argv is not None else [])
+    from repro.kernels import ops
+    cells = fused_cells(iters=args.iters)
+    report(csv, cells, check=not args.no_check)
+    result = {"backend": ops.resolve_backend(),
+              "lowering_plan": [list(kv) for kv in
+                                ops.lowering_plan(ops.resolve_backend())],
+              "speedup_floor": SPEEDUP_FLOOR, "iters": args.iters,
+              "cells": cells}
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"wrote {args.json}")
+    return result
+
+
+if __name__ == "__main__":
+    import sys
+    main(argv=sys.argv[1:])

@@ -9,10 +9,14 @@ Part 2 (kernel fwd+bwd roofline, always runnable): times the Pallas
 flash-attention and SSD kernels — forward AND the registered custom_vjp
 BACKWARD — against the jnp-oracle recompute backward they replaced
 (``ops.oracle_attention_vjp`` / ``ops.oracle_ssd_vjp``, the pre-§11
-bwd rules).  Emits ``BENCH_kernels.json`` and ASSERTS the Pallas
-backward beats the oracle backward at every benchmarked shape; block
-sizes come from the autotuner exactly as the stage hot path resolves
-them.
+bwd rules), plus the fused stage epilogues against their op-granular
+unfused reference (benchmarks/fused_epilogue.py).  Every cell carries a
+``lowered`` column — the per-kind verdict of the one-shot lowering
+probe (DESIGN.md §13) under which it ran.  Emits ``BENCH_kernels.json``
+and ASSERTS, at every benchmarked shape, that the Pallas backward
+beats the oracle backward and the fused epilogues clear the 1.15x
+speedup floor; block sizes come from the autotuner exactly as the
+stage hot path resolves them.
 
     PYTHONPATH=src:. python benchmarks/roofline_report.py \
         --json BENCH_kernels.json
@@ -45,7 +49,8 @@ def _flash_cell(shape, iters: int) -> Dict:
     from repro.kernels import flash_attention as fa
     B, S, H, KV, D = shape
     backend = ops.resolve_backend()
-    interp = ops.interpret_mode(backend)
+    interp_f = not ops.kernel_lowers("flash_fwd", backend)
+    interp_b = not ops.kernel_lowers("flash_bwd", backend)
     cfg = autotune.flash_config(backend, jnp.float32, S, D)
     ks = jax.random.split(jax.random.PRNGKey(0), 4)
     q = jax.random.normal(ks[0], (B, S, H, D))
@@ -55,18 +60,18 @@ def _flash_cell(shape, iters: int) -> Dict:
 
     fwd_pallas = _time(jax.jit(lambda q, k, v: fa.flash_attention(
         q, k, v, block_q=cfg["block_q"], block_k=cfg["block_k"],
-        interpret=interp)), q, k, v, iters=iters)
+        interpret=interp_f)), q, k, v, iters=iters)
     fwd_oracle = _time(jax.jit(ref.attention_ref), q, k, v, iters=iters)
 
     out, lse = fa.flash_attention_fwd(
         q, k, v, block_q=cfg["block_q"], block_k=cfg["block_k"],
-        interpret=interp)
+        interpret=interp_f)
     bwd_pallas = _time(jax.jit(lambda q, k, v, out, lse, g:
                                fa.flash_attention_bwd(
                                    q, k, v, out, lse, g,
                                    block_q=cfg["block_q"],
                                    block_k=cfg["block_k"],
-                                   interpret=interp)),
+                                   interpret=interp_b)),
                        q, k, v, out, lse, g, iters=iters)
     bwd_oracle = _time(jax.jit(ops.oracle_attention_vjp), q, k, v, g,
                        iters=iters)
@@ -74,7 +79,8 @@ def _flash_cell(shape, iters: int) -> Dict:
     fwd_flops = 2 * 2 * B * H * (S * S // 2) * D
     return {
         "kernel": "flash_attention", "shape": list(shape),
-        "blocks": cfg, "backend": backend, "interpret": interp,
+        "blocks": cfg, "backend": backend,
+        "lowered": not (interp_f or interp_b),
         "fwd_pallas_s": fwd_pallas, "fwd_oracle_s": fwd_oracle,
         "bwd_pallas_s": bwd_pallas, "bwd_oracle_s": bwd_oracle,
         "bwd_speedup": bwd_oracle / bwd_pallas,
@@ -88,7 +94,8 @@ def _ssd_cell(shape, iters: int) -> Dict:
     from repro.kernels import ssd as ssdk
     B, S, H, P, N = shape
     backend = ops.resolve_backend()
-    interp = ops.interpret_mode(backend)
+    interp_f = not ops.kernel_lowers("ssd_fwd", backend)
+    interp_b = not ops.kernel_lowers("ssd_bwd", backend)
     chunk = autotune.ssd_config(backend, jnp.float32, S, P, N)["chunk"]
     ks = jax.random.split(jax.random.PRNGKey(0), 5)
     x = jax.random.normal(ks[0], (B, S, H, P))
@@ -98,18 +105,18 @@ def _ssd_cell(shape, iters: int) -> Dict:
     Cm = jax.random.normal(ks[4], (B, S, H, N))
 
     fwd_pallas = _time(jax.jit(lambda x, dt, A, Bm, Cm: ssdk.ssd(
-        x, dt, A, Bm, Cm, chunk=chunk, interpret=interp)[0]),
+        x, dt, A, Bm, Cm, chunk=chunk, interpret=interp_f)[0]),
         x, dt, A, Bm, Cm, iters=iters)
     fwd_oracle = _time(jax.jit(lambda x, dt, A, Bm, Cm:
                                ref.ssd_ref(x, dt, A, Bm, Cm)[0]),
                        x, dt, A, Bm, Cm, iters=iters)
 
     y, state, cst = ssdk.ssd_fwd(x, dt, A, Bm, Cm, chunk=chunk,
-                                 interpret=interp)
+                                 interpret=interp_f)
     gy = jax.random.normal(jax.random.PRNGKey(7), y.shape)
     gs = jnp.zeros_like(state)
     bwd_pallas = _time(jax.jit(lambda *a: ssdk.ssd_bwd(
-        *a, chunk=chunk, interpret=interp)),
+        *a, chunk=chunk, interpret=interp_b)),
         x, dt, A, Bm, Cm, cst, gy, gs, iters=iters)
     bwd_oracle = _time(
         jax.jit(lambda x, dt, A, Bm, Cm, gy, gs: ops.oracle_ssd_vjp(
@@ -119,7 +126,7 @@ def _ssd_cell(shape, iters: int) -> Dict:
     fwd_flops = 2 * 3 * B * H * S * chunk * max(P, N)
     return {
         "kernel": "ssd", "shape": list(shape), "chunk": chunk,
-        "backend": backend, "interpret": interp,
+        "backend": backend, "lowered": not (interp_f or interp_b),
         "fwd_pallas_s": fwd_pallas, "fwd_oracle_s": fwd_oracle,
         "bwd_pallas_s": bwd_pallas, "bwd_oracle_s": bwd_oracle,
         "bwd_speedup": bwd_oracle / bwd_pallas,
@@ -130,8 +137,14 @@ def _ssd_cell(shape, iters: int) -> Dict:
 
 def kernel_roofline(csv: Csv, iters: int = 3,
                     check: bool = True) -> Dict:
-    """fwd+bwd kernel roofline; asserts the Pallas backward beats the
-    oracle-recompute backward at every shape (acceptance criterion)."""
+    """fwd+bwd kernel roofline; asserts at every shape that the Pallas
+    backward beats the oracle-recompute backward and the fused
+    epilogues clear their speedup floor (acceptance criteria).  Every
+    cell records the per-kind ``lowered`` verdict it ran under — on a
+    lowered cell the margin is the compiled kernel's, on an
+    interpreted cell the algorithmic one (O(S) vs O(S²) recompute);
+    the gate holds in BOTH modes."""
+    from benchmarks import fused_epilogue
     from repro.kernels import ops
     cells: List[Dict] = []
     for shape in FLASH_SHAPES:
@@ -145,15 +158,19 @@ def kernel_roofline(csv: Csv, iters: int = 3,
         csv.add(f"{name}/bwd_pallas_s", c["bwd_pallas_s"] * 1e6,
                 f"{c['bwd_gflops']:.2f}GF/s")
         csv.add(f"{name}/bwd_oracle_s", c["bwd_oracle_s"] * 1e6,
-                f"speedup={c['bwd_speedup']:.2f}x")
+                f"speedup={c['bwd_speedup']:.2f}x lowered={c['lowered']}")
         if check:
             assert c["bwd_pallas_s"] < c["bwd_oracle_s"], (
                 f"Pallas backward slower than the oracle backward at "
-                f"{name}: {c['bwd_pallas_s']:.4f}s vs "
-                f"{c['bwd_oracle_s']:.4f}s")
-    return {"backend": ops.resolve_backend(),
-            "interpret": ops.interpret_mode(), "iters": iters,
-            "cells": cells}
+                f"{name} (lowered={c['lowered']}): "
+                f"{c['bwd_pallas_s']:.4f}s vs {c['bwd_oracle_s']:.4f}s")
+    fcells = fused_epilogue.fused_cells(iters=iters)
+    fused_epilogue.report(csv, fcells, check=check)
+    backend = ops.resolve_backend()
+    return {"backend": backend,
+            "lowering_plan": [list(kv) for kv in
+                              ops.lowering_plan(backend)],
+            "iters": iters, "cells": cells + fcells}
 
 
 def dryrun_report(csv: Csv) -> None:

@@ -7,7 +7,10 @@ Emits ``name,us_per_call,derived`` CSV rows:
   fig10_spot_traces  — Figure 10 / Appendix C (spot instance replay)
   fig11_breakdown    — Figure 11 (time-occupation breakdown)
   roofline_report    — §Roofline terms from the dry-run artifact + the
-                       kernel fwd/bwd roofline (Pallas vs oracle bwd)
+                       kernel fwd/bwd roofline (Pallas vs oracle bwd,
+                       per-cell ``lowered`` verdicts) + fused cells
+  fused_epilogue     — fused residual+RMSNorm / QKV epilogues vs the
+                       op-granular unfused reference (train path)
   planning_scale     — beyond-paper: planner/reconfig latency vs cluster size
   step_time          — compiled per-template programs vs eager reference
                        (steady-state + reconfiguration-to-first-step)
@@ -38,10 +41,11 @@ ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 def main() -> None:
     from benchmarks import (fig10_spot_traces, fig11_breakdown,
-                            planning_scale, recovery_latency,
-                            recovery_policy, roofline_report, step_time,
-                            sync_throughput, table2_throughput,
-                            table3_planning, table4_ckpt_ablation)
+                            fused_epilogue, planning_scale,
+                            recovery_latency, recovery_policy,
+                            roofline_report, step_time, sync_throughput,
+                            table2_throughput, table3_planning,
+                            table4_ckpt_ablation)
     only = sys.argv[1] if len(sys.argv) > 1 else None
 
     def bench_json(name: str):
@@ -55,6 +59,8 @@ def main() -> None:
         "fig10": (fig10_spot_traces.main, None),
         "fig11": (fig11_breakdown.main, None),
         "roofline": (roofline_report.main, bench_json("kernels")),
+        "fused_epilogue": (fused_epilogue.main,
+                           bench_json("fused_epilogue")),
         "planning_scale": (planning_scale.main, None),
         "step_time": (step_time.main, bench_json("step_time")),
         "recovery_latency": (recovery_latency.main, bench_json("recovery")),

@@ -1,37 +1,41 @@
-"""Causal GQA flash-attention forward AND backward — Pallas TPU kernels.
+"""Causal GQA flash-attention forward AND backward — single-writer
+Pallas kernels that lower compiled on Mosaic (TPU) and Triton (GPU).
 
-TPU-native design (not a CUDA port): the grid is (batch, q_heads,
-q_blocks, kv_blocks) and Mosaic executes it sequentially with the last
-axis innermost, so the online-softmax running state (m, l, acc) lives in
-VMEM scratch that persists across the kv_block iterations of one
-(b, h, q_blk) triple.  BlockSpecs tile Q/K/V into VMEM:
+PR 5's kernels were Mosaic-only: the online-softmax state (m, l, acc)
+and the dq/dkv accumulators lived in VMEM scratch carried across a
+trailing kv/q grid axis, legal solely because Mosaic executes the grid
+sequentially — Triton's parallel grid would corrupt them, so GPU had to
+interpret.  This restructure moves every reduction axis INTO the kernel
+body (kernels/gridcheck.py enforces the discipline):
 
-    q   : (1, 1, BLOCK_Q, D)   revisited for every kv block
-    k/v : (1, 1, BLOCK_K, D)   indexed via the GQA head map h -> h//G
-    o   : (1, 1, BLOCK_Q, D)   written on the last kv block
-    lse : (1, 1, BLOCK_Q)      log-sum-exp, written with o
+    fwd : grid (B, H, q_blocks) — all parallel.  One ``fori_loop`` over
+          kv blocks carries (acc, m, l) as loop values; k/v are whole-
+          (padded-)sequence VMEM refs sliced with ``pl.ds``.
+    bwd : THREE single-writer calls, each accumulating only along its
+          own in-body loop —
+          dq : grid (B, H, q_blocks),  loop over kv blocks
+          dk : grid (B, H, kv_blocks), loop over q blocks
+          dv : grid (B, H, kv_blocks), loop over q blocks
+          dk/dv are emitted at Q-head resolution; the GQA group fold is
+          one jnp reshape-sum outside.
 
-Block shapes default to (128, 128) so the MXU sees aligned GEMMs and the
-working set (q + k + v + acc ≈ 4 * 128 * D * 4B) stays far under VMEM;
-the autotuner (kernels/autotune.py) picks larger blocks where the grid
-overhead dominates (e.g. the CPU interpreter).  Causality is enforced
-two ways: fully-masked kv blocks are skipped with ``pl.when`` (no wasted
-MXU work), and the diagonal block gets an explicit position mask.
-Optional sliding-window masking supports the Hymba SWA branch.
+No output block is written by more than one grid cell and no scratch
+survives a grid step, so the grid is fully parallel on every backend.
+The loop bounds are data-independent functions of the block row/column:
+causality skips kv blocks above the diagonal, a sliding window skips
+blocks left of it — the same work-skipping the old ``pl.when`` gave.
 
-The backward is the standard two-pass recompute-free formulation
+The backward stays the standard two-pass recompute-free formulation
 (FlashAttention-2 §3.2): the forward saves (out, lse); ``delta`` =
-rowsum(dO ∘ O) is a cheap jnp preprocessing step; then
+rowsum(dO ∘ O) is a cheap jnp preprocess; p = exp(s - lse) is rebuilt
+blockwise from the saved lse — no O(S²) probability matrix ever exists,
+unlike the jnp-oracle backward ops.py retains as the parity reference.
 
-    dq kernel : grid (B, H, q_blocks, kv_blocks), dq accumulated in VMEM
-                scratch across the kv axis;
-    dkv kernel: grid (B, H, kv_blocks, q_blocks), dk/dv accumulated in
-                VMEM scratch across the q axis, emitted at Q-head
-                resolution (the GQA group-sum is one jnp reshape-sum).
-
-Both recompute p = exp(s - lse) blockwise from the saved lse — no O(S²)
-probability matrix ever exists, unlike the jnp-oracle backward this
-replaces in ops.py.
+Block shapes default to (128, 128) so the MXU/tensor cores see aligned
+GEMMs; the whole-sequence k/v refs cost S·D·4B VMEM each (512 KiB at
+S=2048, D=64), far under budget.  The autotuner (kernels/autotune.py)
+picks larger q/k blocks where grid overhead dominates (e.g. the CPU
+interpreter).
 """
 from __future__ import annotations
 
@@ -42,62 +46,91 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.gridcheck import checked_pallas_call
 
 DEFAULT_BLOCK_Q = 128
 DEFAULT_BLOCK_K = 128
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref,
-                  l_ref, *, block_q: int, block_k: int, seq_len: int,
-                  window: int, num_kv_blocks: int):
+def _kv_bounds(q_start, block_q: int, block_k: int, window: int,
+               num_kv_blocks: int):
+    """[lo, hi) kv-block range a q block attends to (causal + window)."""
+    hi = jnp.minimum((q_start + block_q - 1) // block_k + 1, num_kv_blocks)
+    if window > 0:
+        lo = jnp.maximum((q_start - window + 1) // block_k, 0)
+    else:
+        lo = 0
+    return lo, hi
+
+
+def _q_bounds(k_start, block_q: int, block_k: int, window: int,
+              num_q_blocks: int):
+    """[lo, hi) q-block range that attends to a kv block (transpose of
+    ``_kv_bounds``: iq in range iff k_start <= q_start + block_q - 1 and
+    k_start + block_k - 1 > q_start - window)."""
+    lo = k_start // block_q
+    if window > 0:
+        hi = jnp.minimum((k_start + block_k + window - 2) // block_q + 1,
+                         num_q_blocks)
+    else:
+        hi = num_q_blocks
+    return lo, hi
+
+
+def _scores(q, k, *, q_start, k_start, seq_len: int, window: int):
+    """Scaled masked scores for one (q block, kv block) pair."""
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+    s = s * (1.0 / math.sqrt(q.shape[-1]))              # [bq, bk]
+    qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = (kpos <= qpos) & (kpos < seq_len)
+    if window > 0:
+        mask &= kpos > qpos - window
+    return s, mask
+
+
+def _recompute_p(q, k, lse, *, q_start, k_start, seq_len: int, window: int):
+    """Backward block recompute: p = exp(s - lse), masked."""
+    s, mask = _scores(q, k, q_start=q_start, k_start=k_start,
+                      seq_len=seq_len, window=window)
+    return jnp.where(mask, jnp.exp(s - lse), 0.0)       # [bq, bk]
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, block_q: int,
+                  block_k: int, seq_len: int, window: int,
+                  num_kv_blocks: int):
     iq = pl.program_id(2)
-    ik = pl.program_id(3)
-
-    @pl.when(ik == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-
     q_start = iq * block_q
-    k_start = ik * block_k
-    # causal: skip blocks strictly above the diagonal; with a window also
-    # skip blocks entirely left of it.
-    in_past = k_start <= q_start + block_q - 1
-    in_window = (window <= 0) | (k_start + block_k - 1 > q_start - window)
+    q = q_ref[0, 0].astype(jnp.float32)                 # [bq, d]
+    d = q.shape[-1]
+    lo, hi = _kv_bounds(q_start, block_q, block_k, window, num_kv_blocks)
 
-    @pl.when(in_past & in_window)
-    def _compute():
-        q = q_ref[0, 0].astype(jnp.float32)            # [bq, d]
-        k = k_ref[0, 0].astype(jnp.float32)            # [bk, d]
-        v = v_ref[0, 0].astype(jnp.float32)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
-        s = s * (1.0 / math.sqrt(q.shape[-1]))          # [bq, bk]
-        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        mask = (kpos <= qpos) & (kpos < seq_len)
-        if window > 0:
-            mask &= kpos > qpos - window
+    def body(ik, carry):
+        acc, m_prev, l_prev = carry
+        k_start = ik * block_k
+        k = k_ref[0, 0, pl.ds(k_start, block_k), :].astype(jnp.float32)
+        v = v_ref[0, 0, pl.ds(k_start, block_k), :].astype(jnp.float32)
+        s, mask = _scores(q, k, q_start=q_start, k_start=k_start,
+                          seq_len=seq_len, window=window)
         s = jnp.where(mask, s, NEG_INF)
-
-        m_prev = m_ref[...]                             # [bq, 1]
-        m_cur = jnp.max(s, axis=-1, keepdims=True)
-        m_new = jnp.maximum(m_prev, m_cur)
-        p = jnp.exp(s - m_new)
-        p = jnp.where(mask, p, 0.0)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
         corr = jnp.exp(m_prev - m_new)
-        l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
-        m_ref[...] = m_new
-        acc_ref[...] = (acc_ref[...] * corr
-                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+        l_new = l_prev * corr + jnp.sum(p, -1, keepdims=True)
+        acc = (acc * corr
+               + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+        return acc, m_new, l_new
 
-    @pl.when(ik == num_kv_blocks - 1)
-    def _finalize():
-        l = jnp.maximum(l_ref[...], 1e-20)
-        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
-        lse_ref[0, 0] = (m_ref[...] + jnp.log(l)).reshape(block_q)
+    acc, m, l = jax.lax.fori_loop(
+        lo, hi, body,
+        (jnp.zeros((block_q, d), jnp.float32),
+         jnp.full((block_q, 1), NEG_INF, jnp.float32),
+         jnp.zeros((block_q, 1), jnp.float32)))
+    l = jnp.maximum(l, 1e-20)
+    o_ref[0, 0] = (acc / l).astype(o_ref.dtype)
+    lse_ref[0, 0] = (m + jnp.log(l)).reshape(block_q)
 
 
 def _pad_tr(t: jax.Array, pad: int) -> jax.Array:
@@ -116,33 +149,29 @@ def _fwd_call(q, k, v, *, window: int, block_q: int, block_k: int,
     block_k = min(block_k, S)
     nq = -(-S // block_q)
     nk = -(-S // block_k)
+    Sk = nk * block_k
     qt = _pad_tr(q, nq * block_q - S)
-    kt = _pad_tr(k, nk * block_k - S)
-    vt = _pad_tr(v, nk * block_k - S)
+    kt = _pad_tr(k, Sk - S)
+    vt = _pad_tr(v, Sk - S)
 
     kernel = functools.partial(
         _flash_kernel, block_q=block_q, block_k=block_k, seq_len=S,
         window=window, num_kv_blocks=nk)
-    out, lse = pl.pallas_call(
-        kernel,
-        grid=(B, H, nq, nk),
+    out, lse = checked_pallas_call(
+        "flash_fwd", kernel,
+        grid=(B, H, nq),
         in_specs=[
-            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
-            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, Sk, D), lambda b, h, iq: (b, h // G, 0, 0)),
+            pl.BlockSpec((1, 1, Sk, D), lambda b, h, iq: (b, h // G, 0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, block_q), lambda b, h, iq, ik: (b, h, iq)),
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, iq: (b, h, iq)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((B, H, nq * block_q, D), q.dtype),
             jax.ShapeDtypeStruct((B, H, nq * block_q), jnp.float32),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((block_q, D), jnp.float32),   # acc
-            pltpu.VMEM((block_q, 1), jnp.float32),   # m (running max)
-            pltpu.VMEM((block_q, 1), jnp.float32),   # l (running denom)
         ],
         interpret=interpret,
     )(qt, kt, vt)
@@ -186,91 +215,82 @@ def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 # ----------------------------------------------------------------------
-# Backward kernels (two-pass, recompute-free)
+# Backward kernels (two-pass, recompute-free, single-writer)
 # ----------------------------------------------------------------------
-def _recompute_p(q_ref, k_ref, lse_ref, *, q_start, k_start, seq_len,
-                 window, block_q):
-    """Shared block recompute: scaled scores, mask, p = exp(s - lse)."""
-    q = q_ref[0, 0].astype(jnp.float32)                # [bq, d]
-    k = k_ref[0, 0].astype(jnp.float32)                # [bk, d]
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
-    s = s * (1.0 / math.sqrt(q.shape[-1]))
-    qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-    kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    mask = (kpos <= qpos) & (kpos < seq_len)
-    if window > 0:
-        mask &= kpos > qpos - window
-    lse = lse_ref[0, 0].reshape(block_q, 1)            # [bq, 1]
-    p = jnp.where(mask, jnp.exp(s - lse), 0.0)         # [bq, bk]
-    return q, k, p
-
-
 def _flash_bwd_dq_kernel(q_ref, k_ref, v_ref, g_ref, lse_ref, d_ref,
-                         dq_ref, dq_acc, *, block_q: int, block_k: int,
+                         dq_ref, *, block_q: int, block_k: int,
                          seq_len: int, window: int, num_kv_blocks: int):
     iq = pl.program_id(2)
-    ik = pl.program_id(3)
-
-    @pl.when(ik == 0)
-    def _init():
-        dq_acc[...] = jnp.zeros_like(dq_acc)
-
     q_start = iq * block_q
-    k_start = ik * block_k
-    in_past = k_start <= q_start + block_q - 1
-    in_window = (window <= 0) | (k_start + block_k - 1 > q_start - window)
+    q = q_ref[0, 0].astype(jnp.float32)                 # [bq, d]
+    g = g_ref[0, 0].astype(jnp.float32)                 # [bq, d]
+    lse = lse_ref[0, 0].reshape(block_q, 1)
+    delta = d_ref[0, 0].reshape(block_q, 1)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    lo, hi = _kv_bounds(q_start, block_q, block_k, window, num_kv_blocks)
 
-    @pl.when(in_past & in_window)
-    def _compute():
-        q, k, p = _recompute_p(q_ref, k_ref, lse_ref, q_start=q_start,
-                               k_start=k_start, seq_len=seq_len,
-                               window=window, block_q=block_q)
-        v = v_ref[0, 0].astype(jnp.float32)            # [bk, d]
-        g = g_ref[0, 0].astype(jnp.float32)            # [bq, d]
-        delta = d_ref[0, 0].reshape(block_q, 1)        # [bq, 1]
+    def body(ik, dq):
+        k_start = ik * block_k
+        k = k_ref[0, 0, pl.ds(k_start, block_k), :].astype(jnp.float32)
+        v = v_ref[0, 0, pl.ds(k_start, block_k), :].astype(jnp.float32)
+        p = _recompute_p(q, k, lse, q_start=q_start, k_start=k_start,
+                         seq_len=seq_len, window=window)
         dp = jax.lax.dot_general(g, v, (((1,), (1,)), ((), ())))
-        ds = p * (dp - delta) * (1.0 / math.sqrt(q.shape[-1]))
-        dq_acc[...] += jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())))
+        ds = p * (dp - delta) * scale
+        return dq + jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())))
 
-    @pl.when(ik == num_kv_blocks - 1)
-    def _finalize():
-        dq_ref[0, 0] = dq_acc[...].astype(dq_ref.dtype)
+    dq = jax.lax.fori_loop(
+        lo, hi, body, jnp.zeros((block_q, q.shape[-1]), jnp.float32))
+    dq_ref[0, 0] = dq.astype(dq_ref.dtype)
 
 
-def _flash_bwd_dkv_kernel(q_ref, k_ref, v_ref, g_ref, lse_ref, d_ref,
-                          dk_ref, dv_ref, dk_acc, dv_acc, *, block_q: int,
-                          block_k: int, seq_len: int, window: int,
-                          num_q_blocks: int):
+def _flash_bwd_dk_kernel(q_ref, k_ref, v_ref, g_ref, lse_ref, d_ref,
+                         dk_ref, *, block_q: int, block_k: int,
+                         seq_len: int, window: int, num_q_blocks: int):
     ik = pl.program_id(2)
-    iq = pl.program_id(3)
-
-    @pl.when(iq == 0)
-    def _init():
-        dk_acc[...] = jnp.zeros_like(dk_acc)
-        dv_acc[...] = jnp.zeros_like(dv_acc)
-
-    q_start = iq * block_q
     k_start = ik * block_k
-    in_past = k_start <= q_start + block_q - 1
-    in_window = (window <= 0) | (k_start + block_k - 1 > q_start - window)
+    k = k_ref[0, 0].astype(jnp.float32)                 # [bk, d]
+    v = v_ref[0, 0].astype(jnp.float32)                 # [bk, d]
+    scale = 1.0 / math.sqrt(k.shape[-1])
+    lo, hi = _q_bounds(k_start, block_q, block_k, window, num_q_blocks)
 
-    @pl.when(in_past & in_window)
-    def _compute():
-        q, _, p = _recompute_p(q_ref, k_ref, lse_ref, q_start=q_start,
-                               k_start=k_start, seq_len=seq_len,
-                               window=window, block_q=block_q)
-        v = v_ref[0, 0].astype(jnp.float32)            # [bk, d]
-        g = g_ref[0, 0].astype(jnp.float32)            # [bq, d]
-        delta = d_ref[0, 0].reshape(block_q, 1)        # [bq, 1]
-        dv_acc[...] += jax.lax.dot_general(p, g, (((0,), (0,)), ((), ())))
+    def body(iq, dk):
+        q_start = iq * block_q
+        q = q_ref[0, 0, pl.ds(q_start, block_q), :].astype(jnp.float32)
+        g = g_ref[0, 0, pl.ds(q_start, block_q), :].astype(jnp.float32)
+        lse = lse_ref[0, 0, pl.ds(q_start, block_q)].reshape(block_q, 1)
+        delta = d_ref[0, 0, pl.ds(q_start, block_q)].reshape(block_q, 1)
+        p = _recompute_p(q, k, lse, q_start=q_start, k_start=k_start,
+                         seq_len=seq_len, window=window)
         dp = jax.lax.dot_general(g, v, (((1,), (1,)), ((), ())))
-        ds = p * (dp - delta) * (1.0 / math.sqrt(q.shape[-1]))
-        dk_acc[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())))
+        ds = p * (dp - delta) * scale                   # [bq, bk]
+        return dk + jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())))
 
-    @pl.when(iq == num_q_blocks - 1)
-    def _finalize():
-        dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
-        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+    dk = jax.lax.fori_loop(
+        lo, hi, body, jnp.zeros((block_k, k.shape[-1]), jnp.float32))
+    dk_ref[0, 0] = dk.astype(dk_ref.dtype)
+
+
+def _flash_bwd_dv_kernel(q_ref, k_ref, g_ref, lse_ref, dv_ref, *,
+                         block_q: int, block_k: int, seq_len: int,
+                         window: int, num_q_blocks: int):
+    ik = pl.program_id(2)
+    k_start = ik * block_k
+    k = k_ref[0, 0].astype(jnp.float32)                 # [bk, d]
+    lo, hi = _q_bounds(k_start, block_q, block_k, window, num_q_blocks)
+
+    def body(iq, dv):
+        q_start = iq * block_q
+        q = q_ref[0, 0, pl.ds(q_start, block_q), :].astype(jnp.float32)
+        g = g_ref[0, 0, pl.ds(q_start, block_q), :].astype(jnp.float32)
+        lse = lse_ref[0, 0, pl.ds(q_start, block_q)].reshape(block_q, 1)
+        p = _recompute_p(q, k, lse, q_start=q_start, k_start=k_start,
+                         seq_len=seq_len, window=window)
+        return dv + jax.lax.dot_general(p, g, (((0,), (0,)), ((), ())))
+
+    dv = jax.lax.fori_loop(
+        lo, hi, body, jnp.zeros((block_k, k.shape[-1]), jnp.float32))
+    dv_ref[0, 0] = dv.astype(dv_ref.dtype)
 
 
 @functools.partial(
@@ -282,7 +302,7 @@ def flash_attention_bwd(q: jax.Array, k: jax.Array, v: jax.Array,
                         block_k: int = DEFAULT_BLOCK_K,
                         interpret: bool = False
                         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Two-pass flash-attention backward.
+    """Two-pass flash-attention backward (three single-writer kernels).
 
     q/g/out: [B, S, H, D]; k/v: [B, S, KV, D]; lse: [B, H, S] fp32.
     Returns (dq, dk, dv) with the primals' layouts and dtypes.
@@ -294,59 +314,61 @@ def flash_attention_bwd(q: jax.Array, k: jax.Array, v: jax.Array,
     block_k = min(block_k, S)
     nq = -(-S // block_q)
     nk = -(-S // block_k)
-    pad_q = nq * block_q - S
-    pad_k = nk * block_k - S
-    qt = _pad_tr(q, pad_q)
-    kt = _pad_tr(k, pad_k)
-    vt = _pad_tr(v, pad_k)
-    gt = _pad_tr(g, pad_q)
+    Sq = nq * block_q
+    Sk = nk * block_k
+    qt = _pad_tr(q, Sq - S)
+    kt = _pad_tr(k, Sk - S)
+    vt = _pad_tr(v, Sk - S)
+    gt = _pad_tr(g, Sq - S)
     # delta = rowsum(dO * O) — the cheap preprocessing pass
     delta = jnp.sum(g.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
-    delta = jnp.pad(delta.transpose(0, 2, 1), ((0, 0), (0, 0), (0, pad_q)))
-    lse_p = jnp.pad(lse, ((0, 0), (0, 0), (0, pad_q)))
+    delta = jnp.pad(delta.transpose(0, 2, 1), ((0, 0), (0, 0), (0, Sq - S)))
+    lse_p = jnp.pad(lse, ((0, 0), (0, 0), (0, Sq - S)))
 
-    q_spec = pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0))
-    kv_spec = pl.BlockSpec((1, 1, block_k, D),
-                           lambda b, h, i, j: (b, h // G, j, 0))
-    row_spec = pl.BlockSpec((1, 1, block_q), lambda b, h, i, j: (b, h, i))
+    q_blk = pl.BlockSpec((1, 1, block_q, D), lambda b, h, i: (b, h, i, 0))
+    q_all = pl.BlockSpec((1, 1, Sq, D), lambda b, h, i: (b, h, 0, 0))
+    kv_blk = pl.BlockSpec((1, 1, block_k, D),
+                          lambda b, h, i: (b, h // G, i, 0))
+    kv_all = pl.BlockSpec((1, 1, Sk, D), lambda b, h, i: (b, h // G, 0, 0))
+    row_blk = pl.BlockSpec((1, 1, block_q), lambda b, h, i: (b, h, i))
+    row_all = pl.BlockSpec((1, 1, Sq), lambda b, h, i: (b, h, 0))
+    kv_out = pl.BlockSpec((1, 1, block_k, D), lambda b, h, i: (b, h, i, 0))
 
-    dq_kernel = functools.partial(
-        _flash_bwd_dq_kernel, block_q=block_q, block_k=block_k, seq_len=S,
-        window=window, num_kv_blocks=nk)
-    dq = pl.pallas_call(
-        dq_kernel,
-        grid=(B, H, nq, nk),
-        in_specs=[q_spec, kv_spec, kv_spec, q_spec, row_spec, row_spec],
-        out_specs=q_spec,
-        out_shape=jax.ShapeDtypeStruct((B, H, nq * block_q, D), q.dtype),
-        scratch_shapes=[pltpu.VMEM((block_q, D), jnp.float32)],
+    dq = checked_pallas_call(
+        "flash_bwd_dq",
+        functools.partial(_flash_bwd_dq_kernel, block_q=block_q,
+                          block_k=block_k, seq_len=S, window=window,
+                          num_kv_blocks=nk),
+        grid=(B, H, nq),
+        in_specs=[q_blk, kv_all, kv_all, q_blk, row_blk, row_blk],
+        out_specs=q_blk,
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
         interpret=interpret,
     )(qt, kt, vt, gt, lse_p, delta)
 
-    # dkv iterates kv blocks outermost: swap the roles of axes 2/3
-    q_spec2 = pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, j, 0))
-    kv_spec2 = pl.BlockSpec((1, 1, block_k, D),
-                            lambda b, h, i, j: (b, h // G, i, 0))
-    row_spec2 = pl.BlockSpec((1, 1, block_q), lambda b, h, i, j: (b, h, j))
-    kv_out2 = pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j: (b, h, i, 0))
-    dkv_kernel = functools.partial(
-        _flash_bwd_dkv_kernel, block_q=block_q, block_k=block_k, seq_len=S,
-        window=window, num_q_blocks=nq)
-    dk_h, dv_h = pl.pallas_call(
-        dkv_kernel,
-        grid=(B, H, nk, nq),
-        in_specs=[q_spec2, kv_spec2, kv_spec2, q_spec2, row_spec2, row_spec2],
-        out_specs=[kv_out2, kv_out2],
-        out_shape=[
-            jax.ShapeDtypeStruct((B, H, nk * block_k, D), k.dtype),
-            jax.ShapeDtypeStruct((B, H, nk * block_k, D), v.dtype),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((block_k, D), jnp.float32),   # dk
-            pltpu.VMEM((block_k, D), jnp.float32),   # dv
-        ],
+    dk_h = checked_pallas_call(
+        "flash_bwd_dk",
+        functools.partial(_flash_bwd_dk_kernel, block_q=block_q,
+                          block_k=block_k, seq_len=S, window=window,
+                          num_q_blocks=nq),
+        grid=(B, H, nk),
+        in_specs=[q_all, kv_blk, kv_blk, q_all, row_all, row_all],
+        out_specs=kv_out,
+        out_shape=jax.ShapeDtypeStruct((B, H, Sk, D), k.dtype),
         interpret=interpret,
     )(qt, kt, vt, gt, lse_p, delta)
+
+    dv_h = checked_pallas_call(
+        "flash_bwd_dv",
+        functools.partial(_flash_bwd_dv_kernel, block_q=block_q,
+                          block_k=block_k, seq_len=S, window=window,
+                          num_q_blocks=nq),
+        grid=(B, H, nk),
+        in_specs=[q_all, kv_blk, q_all, row_all],
+        out_specs=kv_out,
+        out_shape=jax.ShapeDtypeStruct((B, H, Sk, D), v.dtype),
+        interpret=interpret,
+    )(qt, kt, gt, lse_p)
 
     dq = dq[:, :, :S].transpose(0, 2, 1, 3)
     # GQA: per-Q-head dk/dv fold onto the KV heads with one reshape-sum

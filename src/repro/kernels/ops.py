@@ -1,24 +1,35 @@
-"""Jitted public wrappers around the Pallas kernels (DESIGN.md §11).
+"""Jitted public wrappers around the Pallas kernels (DESIGN.md §11, §13).
 
-Backend gating: ``resolve_backend()`` is consulted at every call (not
-frozen at import), and a COMPILED lowering is selected wherever one
-exists for these kernel structures (``COMPILED_BACKENDS`` — Mosaic
-today; see the note there for why the grid-scratch structure has no
-Triton lowering yet), interpreting only where none does.  Because the
-selection still happens at trace time, any cache of traced programs
-must carry ``backend_signature()`` in its key (the runtime's
-ProgramCache does) — otherwise a program traced under the CPU default
-and reused on an accelerator mesh would silently run the Python
-interpreter at device speed's expense.
+Backend gating is a measured LOWERING PROBE, not a platform list: for
+each kernel structure (``KERNEL_KINDS``) the first query on the live
+backend try-compiles a small representative instance and caches the
+verdict one-shot per (kind, backend); kernels whose structure fails to
+lower fall back to interpret (or the XLA-fused formulation, for the
+fused epilogues) PER KERNEL, not per platform.  For backends that are
+not the process default (nothing to compile against), a static
+capability table answers: the restructured single-writer kernels lower
+on Mosaic and Triton; the SSD carry still rides ``pltpu.VMEM`` scratch,
+which Triton has no lowering for, so GPU interprets the SSD pair only.
+PR 5's ``COMPILED_BACKENDS = ("tpu",)`` — which forced GPU to interpret
+EVERYTHING because the old grid-scratch structure would be corrupted by
+Triton's parallel grid — is gone; the restructure (flash_attention.py,
+ssd.py, gridcheck.py) is what made the probe meaningful.
+
+Because lowering is resolved at trace time, it is part of program
+identity: any cache of traced programs must carry
+``backend_signature()`` — now (backend, per-kind lowering plan) — in
+its key (the runtime's ProgramCache does; see runtime/executor.py).
+Otherwise a program traced under the CPU default and reused on an
+accelerator mesh would silently run the Python interpreter at device
+speed's expense.
 
 Both kernels carry a ``jax.custom_vjp`` whose backward is ALSO a Pallas
-kernel (kernels/flash_attention.py, kernels/ssd.py): flash-attention
-uses the standard two-pass recompute-free dq/dkv structure from the
-saved (out, lse) residuals; SSD replays chunks in reverse from the
-saved chunk-boundary states.  The pure-jnp oracles (kernels/ref.py)
-remain the parity references — ``oracle_attention_vjp`` /
-``oracle_ssd_vjp`` are the OLD recompute-through-oracle backward rules,
-retained for tests and the roofline benchmark's baseline.
+kernel (kernels/flash_attention.py, kernels/ssd.py), with separate
+fwd/bwd interpret flags so e.g. a backend that lowers the forward but
+not the backward still compiles half the pair.  The pure-jnp oracles
+(kernels/ref.py) remain the parity references — ``oracle_attention_vjp``
+/ ``oracle_ssd_vjp`` are the OLD recompute-through-oracle backward
+rules, retained for tests and the roofline benchmark's baseline.
 
 Block sizes default to the autotuner's (backend, dtype, shape-bucket)
 cache (kernels/autotune.py); explicit ``block_q``/``block_k``/``chunk``
@@ -27,69 +38,189 @@ arguments override it.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import autotune
 from repro.kernels import flash_attention as _fa
+from repro.kernels import fused as _fused
 from repro.kernels import ref as _ref
 from repro.kernels import ssd as _ssd
 
-#: Backends with a compiled Pallas lowering for THESE kernels.  The
-#: rule is capability, not platform: interpret only where no lowering
-#: exists.  Both kernels are Mosaic-structured — online state lives in
-#: ``pltpu.VMEM`` scratch carried across the innermost grid axis, legal
-#: because Mosaic executes the grid sequentially.  The Triton lowering
-#: has no TPU memory spaces and runs grid blocks in parallel, so on GPU
-#: that structure has NO lowering and would corrupt the accumulators if
-#: force-lowered; GPU therefore interprets until a Triton-structured
-#: variant (in-body kv/chunk fori_loop, grid without the reduction
-#: axis) lands — extend this tuple alongside that variant.
-COMPILED_BACKENDS = ("tpu",)
+#: Kernel structures the probe resolves independently.
+KERNEL_KINDS = ("flash_fwd", "flash_bwd", "ssd_fwd", "ssd_bwd",
+                "fused_norm", "fused_qkv")
+
+#: Capability table for backends that are NOT the process default —
+#: there is nothing to try-compile against, so this is the structural
+#: answer: single-writer parallel-grid kernels (flash fwd/bwd, both
+#: fused epilogues) lower on Mosaic and Triton alike; the SSD pair
+#: still carries dstate in pltpu.VMEM scratch along the sequential
+#: chunk axis, which has no Triton lowering yet.
+_STATIC_LOWERING: Dict[str, Dict[str, bool]] = {
+    "tpu": {k: True for k in KERNEL_KINDS},
+    "gpu": {k: not k.startswith("ssd") for k in KERNEL_KINDS},
+    "cuda": {k: not k.startswith("ssd") for k in KERNEL_KINDS},
+    "rocm": {k: not k.startswith("ssd") for k in KERNEL_KINDS},
+    "cpu": {k: False for k in KERNEL_KINDS},
+}
+
+_LOWERING_CACHE: Dict[Tuple[str, str], bool] = {}
 
 
 def resolve_backend() -> str:
     return jax.default_backend()
 
 
+def _probe_flash_fwd():
+    q = jnp.zeros((1, 128, 2, 64), jnp.float32)
+    k = jnp.zeros((1, 128, 1, 64), jnp.float32)
+    _fa.flash_attention.lower(q, k, k, window=0, block_q=128, block_k=128,
+                              interpret=False).compile()
+
+
+def _probe_flash_bwd():
+    q = jnp.zeros((1, 128, 2, 64), jnp.float32)
+    k = jnp.zeros((1, 128, 1, 64), jnp.float32)
+    lse = jnp.zeros((1, 2, 128), jnp.float32)
+    _fa.flash_attention_bwd.lower(q, k, k, q, lse, q, window=0,
+                                  block_q=128, block_k=128,
+                                  interpret=False).compile()
+
+
+def _probe_ssd_fwd():
+    x = jnp.zeros((1, 128, 1, 64), jnp.float32)
+    dt = jnp.zeros((1, 128, 1), jnp.float32)
+    A = jnp.zeros((1,), jnp.float32)
+    B = jnp.zeros((1, 128, 1, 16), jnp.float32)
+    _ssd.ssd_fwd.lower(x, dt, A, B, B, chunk=128,
+                       interpret=False).compile()
+
+
+def _probe_ssd_bwd():
+    x = jnp.zeros((1, 128, 1, 64), jnp.float32)
+    dt = jnp.zeros((1, 128, 1), jnp.float32)
+    A = jnp.zeros((1,), jnp.float32)
+    B = jnp.zeros((1, 128, 1, 16), jnp.float32)
+    cst = jnp.zeros((1, 1, 1, 64, 16), jnp.float32)
+    gst = jnp.zeros((1, 1, 64, 16), jnp.float32)
+    _ssd.ssd_bwd.lower(x, dt, A, B, B, cst, x, gst, chunk=128,
+                       interpret=False).compile()
+
+
+def _probe_fused_norm():
+    x = jnp.zeros((128, 64), jnp.float32)
+    w = jnp.zeros((64,), jnp.float32)
+
+    def f(x, r, w):
+        res, h = _fused.add_rmsnorm(x, r, w, block_rows=128,
+                                    interpret=False)
+        return jnp.sum(res) + jnp.sum(h)
+
+    jax.jit(jax.grad(f, argnums=(0, 1, 2))).lower(x, x, w).compile()
+
+
+def _probe_fused_qkv():
+    x = jnp.zeros((128, 64), jnp.float32)
+    w = jnp.zeros((64, 128), jnp.float32)
+
+    def f(x, wq, wk, wv):
+        q, k, v = _fused.qkv(x, wq, wk, wv, block_m=128, block_n=128,
+                             interpret=False)
+        return jnp.sum(q) + jnp.sum(k) + jnp.sum(v)
+
+    jax.jit(jax.grad(f, argnums=(0, 1, 2, 3))).lower(x, w, w, w).compile()
+
+
+_PROBES = {
+    "flash_fwd": _probe_flash_fwd,
+    "flash_bwd": _probe_flash_bwd,
+    "ssd_fwd": _probe_ssd_fwd,
+    "ssd_bwd": _probe_ssd_bwd,
+    "fused_norm": _probe_fused_norm,
+    "fused_qkv": _probe_fused_qkv,
+}
+
+
+def kernel_lowers(kind: str, backend: Optional[str] = None) -> bool:
+    """One-shot cached lowering probe: True iff ``kind``'s structure
+    compiles on ``backend``.  The live (default) backend is answered by
+    an actual try-compile of a representative instance; other backends
+    by the static capability table."""
+    if kind not in KERNEL_KINDS:
+        raise ValueError(f"unknown kernel kind {kind!r}")
+    backend = backend or resolve_backend()
+    key = (kind, backend)
+    if key not in _LOWERING_CACHE:
+        if backend == jax.default_backend():
+            try:
+                _PROBES[kind]()
+                _LOWERING_CACHE[key] = True
+            except Exception:
+                _LOWERING_CACHE[key] = False
+        else:
+            table = _STATIC_LOWERING.get(backend, {})
+            _LOWERING_CACHE[key] = table.get(kind, False)
+    return _LOWERING_CACHE[key]
+
+
+def _reset_lowering_cache() -> None:
+    """Test hook: forget probe verdicts (e.g. after monkeypatching)."""
+    _LOWERING_CACHE.clear()
+
+
+def lowering_plan(backend: Optional[str] = None
+                  ) -> Tuple[Tuple[str, bool], ...]:
+    """Per-kind lowering verdicts, in KERNEL_KINDS order (hashable)."""
+    backend = backend or resolve_backend()
+    return tuple((k, kernel_lowers(k, backend)) for k in KERNEL_KINDS)
+
+
 def interpret_mode(backend: Optional[str] = None) -> bool:
-    """True iff the kernels must run under the Pallas interpreter."""
-    return (backend or resolve_backend()) not in COMPILED_BACKENDS
+    """True iff ANY kernel structure must run under the Pallas
+    interpreter on ``backend`` (the conservative aggregate; per-kernel
+    callers should ask ``kernel_lowers`` directly)."""
+    backend = backend or resolve_backend()
+    return any(not lowered for _, lowered in lowering_plan(backend))
 
 
-def backend_signature() -> Tuple[str, bool]:
-    """(backend, interpret) — REQUIRED component of any cache key over
-    traced programs that may contain these kernels (the bug this fixes:
-    interpret mode was baked in at trace time, so a program cached on
-    the CPU default ran interpreted when reused on an accelerator)."""
+def backend_signature() -> Tuple[str, Tuple[Tuple[str, bool], ...]]:
+    """(backend, per-kind lowering plan) — REQUIRED component of any
+    cache key over traced programs that may contain these kernels (the
+    bug this fixes: lowering is resolved at trace time, so a program
+    cached on the CPU default would run interpreted when reused on an
+    accelerator mesh — and, since the probe is per kernel, two backends
+    may compile different SUBSETS of the kinds)."""
     backend = resolve_backend()
-    return (backend, interpret_mode(backend))
+    return (backend, lowering_plan(backend))
 
 
 # ----------------------------------------------------------------------
 # Flash attention
 # ----------------------------------------------------------------------
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
 def _flash(q, k, v, window: int, block_q: int, block_k: int,
-           interpret: bool):
+           interpret_fwd: bool, interpret_bwd: bool):
     return _fa.flash_attention(q, k, v, window=window, block_q=block_q,
-                               block_k=block_k, interpret=interpret)
+                               block_k=block_k, interpret=interpret_fwd)
 
 
-def _flash_fwd(q, k, v, window, block_q, block_k, interpret):
+def _flash_fwd(q, k, v, window, block_q, block_k, interpret_fwd,
+               interpret_bwd):
     out, lse = _fa.flash_attention_fwd(
         q, k, v, window=window, block_q=block_q, block_k=block_k,
-        interpret=interpret)
+        interpret=interpret_fwd)
     return out, (q, k, v, out, lse)
 
 
-def _flash_bwd(window, block_q, block_k, interpret, res, g):
+def _flash_bwd(window, block_q, block_k, interpret_fwd, interpret_bwd,
+               res, g):
     q, k, v, out, lse = res
     return _fa.flash_attention_bwd(
         q, k, v, out, lse, g, window=window, block_q=block_q,
-        block_k=block_k, interpret=interpret)
+        block_k=block_k, interpret=interpret_bwd)
 
 
 _flash.defvjp(_flash_fwd, _flash_bwd)
@@ -110,30 +241,31 @@ def flash_attention(q, k, v, window: int = 0,
         block_q = block_q or cfg["block_q"]
         block_k = block_k or cfg["block_k"]
     return _flash(q, k, v, window, block_q, block_k,
-                  interpret_mode(backend))
+                  not kernel_lowers("flash_fwd", backend),
+                  not kernel_lowers("flash_bwd", backend))
 
 
 # ----------------------------------------------------------------------
 # SSD (Mamba2 chunked scan)
 # ----------------------------------------------------------------------
-@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
-def _ssd_p(x, dt, A, B, C, chunk: int,
-           interpret: bool) -> Tuple[jax.Array, jax.Array]:
-    return _ssd.ssd(x, dt, A, B, C, chunk=chunk, interpret=interpret)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _ssd_p(x, dt, A, B, C, chunk: int, interpret_fwd: bool,
+           interpret_bwd: bool) -> Tuple[jax.Array, jax.Array]:
+    return _ssd.ssd(x, dt, A, B, C, chunk=chunk, interpret=interpret_fwd)
 
 
-def _ssd_fwd(x, dt, A, B, C, chunk, interpret):
+def _ssd_fwd(x, dt, A, B, C, chunk, interpret_fwd, interpret_bwd):
     y, state, cstates = _ssd.ssd_fwd(x, dt, A, B, C, chunk=chunk,
-                                     interpret=interpret)
+                                     interpret=interpret_fwd)
     return (y, state), (x, dt, A, B, C, cstates)
 
 
-def _ssd_bwd(chunk, interpret, res, g):
+def _ssd_bwd(chunk, interpret_fwd, interpret_bwd, res, g):
     x, dt, A, B, C, cstates = res
     gy, gstate = g
     return _ssd.ssd_bwd(x, dt, A, B, C, cstates, gy,
                         gstate.astype(jnp.float32), chunk=chunk,
-                        interpret=interpret)
+                        interpret=interpret_bwd)
 
 
 _ssd_p.defvjp(_ssd_fwd, _ssd_bwd)
@@ -150,7 +282,51 @@ def ssd(x, dt, A, B, C,
     if chunk is None:
         chunk = autotune.ssd_config(backend, x.dtype, x.shape[1],
                                     x.shape[3], B.shape[-1])["chunk"]
-    return _ssd_p(x, dt, A, B, C, chunk, interpret_mode(backend))
+    return _ssd_p(x, dt, A, B, C, chunk,
+                  not kernel_lowers("ssd_fwd", backend),
+                  not kernel_lowers("ssd_bwd", backend))
+
+
+# ----------------------------------------------------------------------
+# Fused stage epilogues (kernels/fused.py)
+# ----------------------------------------------------------------------
+def fused_add_rmsnorm(x, r, w, eps: float = 1e-6
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Fused (res, h) = (x + r, rms_norm(w, x + r)).
+
+    Routed like the attention/SSD kernels: the Pallas kernel where the
+    structure lowers compiled, otherwise the single-expression XLA
+    formulation (an INTERPRETED Pallas elementwise kernel would lose to
+    XLA's own fusion, so the fallback is XLA-level fusion, not the
+    interpreter).  ``w`` must already be in x.dtype.
+    """
+    backend = resolve_backend()
+    if kernel_lowers("fused_norm", backend):
+        rows = x.size // x.shape[-1]
+        cfg = autotune.fused_config(backend, x.dtype, rows, x.shape[-1])
+        return _fused.add_rmsnorm(x, r, w, eps=eps,
+                                  block_rows=cfg["block_rows"],
+                                  interpret=False)
+    return _fused.add_rmsnorm_ref(x, r, w, eps=eps)
+
+
+def fused_qkv(x, wq, wk, wv, bq=None, bk=None, bv=None
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused QKV projection, one program either way: Pallas tiles over
+    the concatenated weight (one wide GEMM + bias epilogue) where the
+    structure lowers compiled; a single XLA program of three dots with
+    fused bias epilogues otherwise (XLA:CPU prefers the narrow GEMM
+    shapes — see fused.qkv_ref).  Both eliminate the per-op dispatches
+    and intermediate materialization of the unfused path."""
+    backend = resolve_backend()
+    if kernel_lowers("fused_qkv", backend):
+        rows = x.size // x.shape[-1]
+        cols = wq.shape[1] + wk.shape[1] + wv.shape[1]
+        cfg = autotune.fused_config(backend, x.dtype, rows, cols)
+        return _fused.qkv(x, wq, wk, wv, bq, bk, bv,
+                          block_m=cfg["block_rows"],
+                          block_n=cfg["block_cols"], interpret=False)
+    return _fused.qkv_ref(x, wq, wk, wv, bq, bk, bv)
 
 
 # ----------------------------------------------------------------------

@@ -1,12 +1,16 @@
-"""Mamba2 SSD chunked scan — Pallas TPU kernels (forward AND backward).
+"""Mamba2 SSD chunked scan — Pallas kernels (forward AND backward) with
+an explicitly SEQUENTIAL chunk axis.
 
-TPU-native structure: the grid is (batch, heads, chunks).  Mosaic runs
-the grid sequentially with the LAST axis innermost, so the inter-chunk
-SSM state lives in VMEM scratch ([P, N] fp32) and flows across the chunk
-iterations of one (b, h) pair — the sequential recurrence costs no HBM
-round-trips (the GPU version writes chunk states to HBM and runs a
-separate scan kernel; on TPU the sequential-grid guarantee makes that
-unnecessary — see DESIGN.md hardware-adaptation notes).
+Grid (batch, heads, chunks), built through ``checked_pallas_call``
+(kernels/gridcheck.py) with the chunk axis declared sequential and the
+inter-chunk SSM state carried in scratch along it.  On Mosaic the grid
+is executed sequentially anyway (the declaration maps to
+``dimension_semantics=("parallel", "parallel", "arbitrary")`` so batch
+and heads may still be distributed); on Triton a sequential
+("arbitrary") innermost axis is serialized, which is what makes the
+[P, N] fp32 scratch carry legal there too — the recurrence costs no HBM
+round-trips on either backend (the classic GPU alternative writes chunk
+states to HBM and runs a separate scan kernel; see DESIGN.md §13).
 
 Per chunk the kernel computes, entirely in VMEM:
     cum      = cumsum(dt * A)                       [Q,1]
@@ -19,24 +23,30 @@ N = SSM state size.  The working set Q*Q + Q*(P+2N) fp32 stays well under
 VMEM for every assigned config (mamba2: P=64, N=128; hymba: P=64, N=16).
 
 The backward mirrors the recurrence in REVERSE chunk order (index maps
-c -> nc-1-c), carrying the state cotangent dS in the same VMEM scratch
-slot the forward carries the state in.  It is recompute-free in the
-flash-attention sense: the forward saves only the [P, N] state at each
-chunk BOUNDARY (``ssd_fwd``'s third output, S/Q of them) and every
-intra-chunk quantity (cum, decay, W) is rebuilt blockwise in VMEM —
-never the O(S·Q) full set.  All decay-product terms mask with
-``jnp.where(tri, ..., 0)`` AFTER the multiply: above-diagonal decays can
-overflow to inf and 0*inf would poison the block with NaNs.
+c -> nc-1-c), carrying the state cotangent dS in the same scratch slot
+the forward carries the state in — the ONLY cross-iteration state.  The
+scalar dA reduction that PR 5 accumulated in scratch and wrote once at
+the last chunk is now a per-chunk partial output ([b, H, nc], one block
+per grid cell — single-writer) summed outside: the kernel has no
+finalize step and no write that depends on grid position.  It is
+recompute-free in the flash-attention sense: the forward saves only the
+[P, N] state at each chunk BOUNDARY (``ssd_fwd``'s third output, S/Q of
+them) and every intra-chunk quantity (cum, decay, W) is rebuilt
+blockwise in VMEM — never the O(S·Q) full set.  All decay-product terms
+mask with ``jnp.where(tri, ..., 0)`` AFTER the multiply: above-diagonal
+decays can overflow to inf and 0*inf would poison the block with NaNs.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.gridcheck import checked_pallas_call
 
 DEFAULT_CHUNK = 128
 
@@ -110,6 +120,8 @@ def _ssd_call(x, dt, A, B, C, *, chunk: int, interpret: bool,
 
     out_specs = [
         pl.BlockSpec((1, chunk, 1, P), lambda i, h, c: (i, c, h, 0)),
+        # final state: every chunk writes the same block — legal only
+        # because axis 2 is declared sequential (last write wins)
         pl.BlockSpec((1, 1, P, N), lambda i, h, c: (i, h, 0, 0)),
     ]
     out_shape = [
@@ -123,8 +135,8 @@ def _ssd_call(x, dt, A, B, C, *, chunk: int, interpret: bool,
             jax.ShapeDtypeStruct((b, H, nc, P, N), jnp.float32))
 
     kernel = functools.partial(_ssd_kernel, chunk=chunk)
-    outs = pl.pallas_call(
-        kernel,
+    outs = checked_pallas_call(
+        "ssd_fwd", kernel,
         grid=(b, H, nc),
         in_specs=[
             pl.BlockSpec((1, chunk, 1, P), lambda i, h, c: (i, c, h, 0)),
@@ -137,6 +149,8 @@ def _ssd_call(x, dt, A, B, C, *, chunk: int, interpret: bool,
         out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
         interpret=interpret,
+        sequential_axes=(2,),
+        scratch_carry_axes=(2,),
     )(x, dt, a2, B, C)
     if with_cstates:
         y, state, cstates = outs
@@ -171,17 +185,16 @@ def ssd_fwd(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
 
 
 # ----------------------------------------------------------------------
-# Backward kernel (reverse chunk order)
+# Backward kernel (reverse chunk order, sequential dstate carry)
 # ----------------------------------------------------------------------
 def _ssd_bwd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, s0_ref, gy_ref,
                     gstate_ref, dx_ref, ddt_ref, db_ref, dc_ref, da_ref,
-                    dstate_scratch, da_acc, *, chunk: int, nc: int):
+                    dstate_scratch, *, chunk: int):
     ci = pl.program_id(2)
 
     @pl.when(ci == 0)
     def _init():
         dstate_scratch[...] = gstate_ref[0, 0]
-        da_acc[...] = jnp.zeros_like(da_acc)
 
     x = x_ref[0, :, 0, :].astype(jnp.float32)          # [Q, P]
     dt = dt_ref[0].astype(jnp.float32)                 # [Q, 1]
@@ -250,16 +263,14 @@ def _ssd_bwd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, s0_ref, gy_ref,
           - jnp.cumsum(dcum, axis=0) + dcum)
     ddt = ddt + da * A
     ddt_ref[0] = ddt.astype(ddt_ref.dtype)
-    da_acc[...] += jnp.sum(da * dt)
+    # dA partial for THIS chunk — one [1,1,1] block per grid cell
+    # (single-writer; the cross-chunk/batch sum happens outside)
+    da_ref[0, 0, 0] = jnp.sum(da * dt)
 
     # --- state cotangent for the PRECEDING chunk ----------------------
     dstate_scratch[...] = (eQ * dS1
                            + jax.lax.dot_general(G, Cs,
                                                  (((0,), (0,)), ((), ()))))
-
-    @pl.when(ci == nc - 1)
-    def _finalize():
-        da_ref[0, 0] = da_acc[0, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
@@ -285,9 +296,9 @@ def ssd_bwd(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
 
     seq_p = lambda i, h, c: (i, nc - 1 - c, h, 0)      # reversed chunks
     seq_p3 = lambda i, h, c: (i, nc - 1 - c, h)
-    kernel = functools.partial(_ssd_bwd_kernel, chunk=chunk, nc=nc)
-    dx, ddt, dB, dC, dA2 = pl.pallas_call(
-        kernel,
+    kernel = functools.partial(_ssd_bwd_kernel, chunk=chunk)
+    dx, ddt, dB, dC, dA3 = checked_pallas_call(
+        "ssd_bwd", kernel,
         grid=(b, H, nc),
         in_specs=[
             pl.BlockSpec((1, chunk, 1, P), seq_p),
@@ -305,20 +316,21 @@ def ssd_bwd(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
             pl.BlockSpec((1, chunk, 1), seq_p3),
             pl.BlockSpec((1, chunk, 1, N), seq_p),
             pl.BlockSpec((1, chunk, 1, N), seq_p),
-            pl.BlockSpec((1, 1), lambda i, h, c: (i, h)),
+            pl.BlockSpec((1, 1, 1), lambda i, h, c: (i, h, nc - 1 - c)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((b, S_p, H, P), x.dtype),
             jax.ShapeDtypeStruct((b, S_p, H), dt.dtype),
             jax.ShapeDtypeStruct((b, S_p, H, N), B.dtype),
             jax.ShapeDtypeStruct((b, S_p, H, N), C.dtype),
-            jax.ShapeDtypeStruct((b, H), jnp.float32),
+            jax.ShapeDtypeStruct((b, H, nc), jnp.float32),
         ],
         scratch_shapes=[
             pltpu.VMEM((P, N), jnp.float32),           # dstate carry
-            pltpu.VMEM((1, 1), jnp.float32),           # dA accumulator
         ],
         interpret=interpret,
+        sequential_axes=(2,),
+        scratch_carry_axes=(2,),
     )(x, dt, a2, B, C, cstates, gy, gstate)
-    dA = jnp.sum(dA2, axis=0).astype(A.dtype)
+    dA = jnp.sum(dA3, axis=(0, 2)).astype(A.dtype)
     return dx[:, :S], ddt[:, :S], dA, dB[:, :S], dC[:, :S]

@@ -9,9 +9,16 @@ Three prefill paths with identical semantics:
     of O(S^2); this path is also the kernel's numerical oracle.
   * ``kernel``  — the Pallas flash-attention kernel through kernels/ops.py
     with its registered Pallas BACKWARD (custom_vjp), autotuned block
-    sizes, compiled where a lowering exists for its structure (Mosaic
-    on TPU; elsewhere it runs interpreted — see ops.COMPILED_BACKENDS).
-    This is the stage hot path the per-template compiled programs run.
+    sizes, compiled wherever the one-shot lowering probe
+    (ops.kernel_lowers, DESIGN.md §13) finds a backend lowering for the
+    kernel structure, interpreted elsewhere.  This is the stage hot
+    path the per-template compiled programs run.
+
+``fused=True`` additionally routes the QKV projection through
+ops.fused_qkv — ONE GEMM against the concatenated [d, (H+2KV)*hd]
+weight with the bias folded into the epilogue — on the training/prefill
+path only (decode's [B, 1, d] activations are dispatch-bound, not
+GEMM-bound, so fusion buys nothing there).
 
 GQA is expressed by reshaping Q to [B, S, KV, G, D] (G = heads-per-kv
 group) so K/V are never materialized at Q's head count.
@@ -48,17 +55,25 @@ def init_attention(rng, arch: ArchConfig, dtype=jnp.float32):
     return p
 
 
-def _project_qkv(params, arch: ArchConfig, x: jax.Array, positions: jax.Array
+def _project_qkv(params, arch: ArchConfig, x: jax.Array, positions: jax.Array,
+                 *, fused: bool = False
                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     B, S, _ = x.shape
     H, KV, hd = arch.num_heads, arch.num_kv_heads, arch.head_dim
-    q = x @ params["wq"].astype(x.dtype)
-    k = x @ params["wk"].astype(x.dtype)
-    v = x @ params["wv"].astype(x.dtype)
-    if arch.qkv_bias:
-        q = q + params["bq"].astype(x.dtype)
-        k = k + params["bk"].astype(x.dtype)
-        v = v + params["bv"].astype(x.dtype)
+    if fused and S > 1:
+        from repro.kernels import ops as kops
+        bias = ((params["bq"], params["bk"], params["bv"])
+                if arch.qkv_bias else (None, None, None))
+        q, k, v = kops.fused_qkv(x, params["wq"], params["wk"],
+                                 params["wv"], *bias)
+    else:
+        q = x @ params["wq"].astype(x.dtype)
+        k = x @ params["wk"].astype(x.dtype)
+        v = x @ params["wv"].astype(x.dtype)
+        if arch.qkv_bias:
+            q = q + params["bq"].astype(x.dtype)
+            k = k + params["bk"].astype(x.dtype)
+            v = v + params["bv"].astype(x.dtype)
     q = q.reshape(B, S, H, hd)
     k = k.reshape(B, S, KV, hd)
     v = v.reshape(B, S, KV, hd)
@@ -141,12 +156,12 @@ def _sdpa_blocked(q, k, v, *, causal: bool, window: int,
 def attention(params, arch: ArchConfig, x: jax.Array, *,
               positions: Optional[jax.Array] = None,
               impl: str = "blocked", window_override: Optional[int] = None,
-              block_kv: int = 512) -> jax.Array:
+              block_kv: int = 512, fused: bool = False) -> jax.Array:
     """Training/prefill attention. x: [B, S, d_model]."""
     B, S, _ = x.shape
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S), (B, S))
-    q, k, v = _project_qkv(params, arch, x, positions)
+    q, k, v = _project_qkv(params, arch, x, positions, fused=fused)
     window = (arch.sliding_window if window_override is None
               else window_override)
     if impl == "kernel" and S > 1:

@@ -48,12 +48,18 @@ class Model:
     remat_policy: str = "full"
     # "kernel" routes stage layers through the Pallas kernels in
     # kernels/ops.py (fwd AND bwd custom_vjp, autotuned blocks); "auto"
-    # picks "kernel" wherever a compiled Pallas lowering exists for the
-    # kernel structure (ops.COMPILED_BACKENDS — TPU today) and the
-    # pure-XLA paths on interpreting backends.
+    # resolves PER KERNEL via the one-shot lowering probe
+    # (ops.kernel_lowers, DESIGN.md §13): "kernel" wherever fwd AND bwd
+    # of that kernel lower compiled, the pure-XLA path otherwise.
     attn_impl: str = "blocked"          # blocked | naive | kernel | auto
     ssd_impl: str = "chunked"           # chunked | scan | kernel | auto
     moe_impl: str = "dense"             # dense | grouped
+    # "fused" routes the residual-add+RMSNorm block epilogue and the
+    # QKV projection through ops.fused_add_rmsnorm / ops.fused_qkv
+    # (Pallas where the probe lowers them, XLA-level fusion otherwise);
+    # "none" keeps the op-per-line formulation.  "auto" == "fused": the
+    # routing layer already degrades gracefully per backend.
+    fuse: str = "auto"                  # auto | fused | none
     constrain: Constrain = _identity_constrain
     # hook applied to a block's params at entry (FSDP gather-at-use)
     unshard: Callable[[Dict], Dict] = lambda tree: tree
@@ -68,11 +74,16 @@ class Model:
     def __post_init__(self):
         if "auto" in (self.attn_impl, self.ssd_impl):
             from repro.kernels import ops as kops
-            compiled = not kops.interpret_mode()
             if self.attn_impl == "auto":
-                self.attn_impl = "kernel" if compiled else "blocked"
+                ok = (kops.kernel_lowers("flash_fwd")
+                      and kops.kernel_lowers("flash_bwd"))
+                self.attn_impl = "kernel" if ok else "blocked"
             if self.ssd_impl == "auto":
-                self.ssd_impl = "kernel" if compiled else "chunked"
+                ok = (kops.kernel_lowers("ssd_fwd")
+                      and kops.kernel_lowers("ssd_bwd"))
+                self.ssd_impl = "kernel" if ok else "chunked"
+        if self.fuse == "auto":
+            self.fuse = "fused"
 
     # ------------------------------------------------------------------
     # Init
@@ -121,15 +132,28 @@ class Model:
         if a.family == "ssm":
             x = x + ssm_lib.mamba(bp["mamba"], a, h, evaluator=self.ssd_impl)
             return self.constrain(x, "act"), aux
+        fused = self.fuse == "fused"
         if a.hybrid_parallel_heads:
-            branch = 0.5 * (attn_lib.attention(bp["attn"], a, h, impl=self.attn_impl)
+            branch = 0.5 * (attn_lib.attention(bp["attn"], a, h,
+                                               impl=self.attn_impl,
+                                               fused=fused)
                             + ssm_lib.mamba(bp["mamba"], a, h,
                                             evaluator=self.ssd_impl))
         else:
-            branch = attn_lib.attention(bp["attn"], a, h, impl=self.attn_impl)
-        x = x + branch
-        x = self.constrain(x, "act")
-        h = self._norm(bp["ln2"], x)
+            branch = attn_lib.attention(bp["attn"], a, h,
+                                        impl=self.attn_impl, fused=fused)
+        if fused:
+            # one pass over the residual: (x + branch) and its RMSNorm
+            # come out of a single fused epilogue (ops.fused_add_rmsnorm)
+            from repro.kernels import ops as kops
+            x, h = kops.fused_add_rmsnorm(x, branch,
+                                          bp["ln2"].astype(x.dtype),
+                                          eps=a.rms_norm_eps)
+            x = self.constrain(x, "act")
+        else:
+            x = x + branch
+            x = self.constrain(x, "act")
+            h = self._norm(bp["ln2"], x)
         if a.moe is not None:
             y, a_loss = self._moe(bp["moe"], h)
             x = x + y

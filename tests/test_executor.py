@@ -297,16 +297,19 @@ def test_hetero_trainer_snapshot_roundtrips_through_ckpt(tmp_path):
 #    per-template programs, still zero-compile across reconfiguration
 # ----------------------------------------------------------------------
 def test_kernel_path_recover_step_zero_compiles():
-    """With attn_impl='kernel' and ssd_impl='kernel' the per-template
-    step programs contain the Pallas forward AND backward kernels (the
-    hybrid arch exercises both flash-attention and SSD).  warm_templates
-    must still make failure -> recover -> first-step run with ZERO XLA
+    """With attn_impl='kernel', ssd_impl='kernel' AND fuse='fused' the
+    per-template step programs contain the Pallas forward AND backward
+    kernels plus the fused residual+RMSNorm / QKV epilogues (the hybrid
+    arch exercises flash-attention and SSD both).  warm_templates must
+    still make failure -> recover -> first-step run with ZERO XLA
     backend compiles, and every grads program key must carry the kernel
-    backend signature (interpret-mode gating is part of cache identity)."""
+    backend signature (the per-kind lowering plan is part of cache
+    identity)."""
     from repro.kernels import ops as kops
     arch = reduced(get_arch("hymba_1_5b"), layers=2)
     model = Model(arch, dtype=jnp.float32, remat=False, attn_impl="kernel",
-                  ssd_impl="kernel", scan_layers=False)
+                  ssd_impl="kernel", fuse="fused", scan_layers=False)
+    assert model.fuse == "fused"
     params = model.init(RNG)
     profile = build_profile(arch, microbatch=MB, seq_len=SEQ)
     opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=0, clip_norm=1.0,

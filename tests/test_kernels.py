@@ -373,18 +373,54 @@ def test_model_auto_impl_resolves_for_backend():
 
 
 def test_backend_signature_gating():
-    """Interpret-mode selection is capability-based: compiled wherever a
-    lowering exists for these kernel structures (Mosaic today — the
-    VMEM-scratch/sequential-grid form has no Triton lowering, so GPU
-    interprets rather than corrupt the accumulators), interpreter
-    everywhere else — and the signature that program caches must key on
-    reflects it."""
+    """Lowering is resolved PER KERNEL, not per platform: the
+    single-writer restructure lowers everywhere a Pallas backend
+    exists, while the SSD kernels keep a sequential-grid VMEM carry
+    that only Mosaic serializes — so TPU lowers everything, GPU lowers
+    flash + the fused epilogues but interprets SSD, and CPU (no
+    compiled Pallas at all) interprets everything.  The signature that
+    program caches key on carries the whole per-kind plan."""
+    for kind in ops.KERNEL_KINDS:
+        assert ops.kernel_lowers(kind, "tpu"), kind
     assert not ops.interpret_mode("tpu")
-    for backend in ("cpu", "gpu", "cuda", "rocm"):
-        assert ops.interpret_mode(backend), backend
+    for backend in ("gpu", "cuda", "rocm"):
+        for kind in ("flash_fwd", "flash_bwd", "fused_norm", "fused_qkv"):
+            assert ops.kernel_lowers(kind, backend), (backend, kind)
+        for kind in ("ssd_fwd", "ssd_bwd"):
+            assert not ops.kernel_lowers(kind, backend), (backend, kind)
+        assert ops.interpret_mode(backend), backend   # any kind interprets
+    for kind in ops.KERNEL_KINDS:
+        assert not ops.kernel_lowers(kind, "cpu"), kind
     sig = ops.backend_signature()
-    assert sig == (jax.default_backend(),
-                   ops.interpret_mode(jax.default_backend()))
+    backend = jax.default_backend()
+    assert sig == (backend, ops.lowering_plan(backend))
+    assert dict(sig[1]) == {k: ops.kernel_lowers(k, backend)
+                            for k in ops.KERNEL_KINDS}
+
+
+def test_lowering_probe_runs_on_live_backend_and_caches(monkeypatch):
+    """On the LIVE backend the verdict comes from a one-shot try-compile
+    of the kernel structure, cached per (kind, backend) — not from the
+    static capability table."""
+    ops._reset_lowering_cache()
+    try:
+        calls = []
+        orig = ops._PROBES["flash_fwd"]
+
+        def spy():
+            calls.append(1)
+            return orig()
+
+        monkeypatch.setitem(ops._PROBES, "flash_fwd", spy)
+        first = ops.kernel_lowers("flash_fwd")
+        second = ops.kernel_lowers("flash_fwd")
+        assert first == second
+        assert len(calls) == 1                      # one-shot, then cached
+        # CPU's Pallas is interpret-only: the probe must discover that
+        if jax.default_backend() == "cpu":
+            assert first is False
+    finally:
+        ops._reset_lowering_cache()
 
 
 def test_autotune_offline_deterministic(tmp_path, monkeypatch):
@@ -400,6 +436,75 @@ def test_autotune_offline_deterministic(tmp_path, monkeypatch):
     # tiny shapes never exceed their bucket
     small = cache.get("flash", "cpu", jnp.float32, (16, 16))
     assert small["block_q"] <= 16
+
+
+def test_autotune_ragged_shapes_get_distinct_entries(tmp_path):
+    """Regression: the pow2-only bucket used to collide e.g. seq 1000
+    onto 1024's entry — blocks tuned on the clean power were served to
+    ragged lengths whose padding/tail tiling is different.  Ragged
+    lengths now keep their own identity under the pow2 roof, and head
+    dims are always keyed exactly."""
+    assert autotune.shape_bucket(1024) == "1024"
+    assert autotune.shape_bucket(1000) == "1024r1000"
+    assert autotune.shape_bucket(129) != autotune.shape_bucket(256)
+    assert autotune._seq_of("1024r1000") == 1000
+    path = str(tmp_path / "a.json")
+    c = autotune.AutotuneCache(path)
+    c.put("flash", "cpu", jnp.float32, (autotune.shape_bucket(1024), 64),
+          {"block_q": 512, "block_k": 512})
+    # the measured pow2 entry must NOT shadow the ragged length...
+    assert c.peek("flash", "cpu", jnp.float32,
+                  (autotune.shape_bucket(1000), 64)) is None
+    # ...which falls back to the offline default instead
+    assert c.get("flash", "cpu", jnp.float32,
+                 (autotune.shape_bucket(1000), 64))["block_q"] >= 128
+    # non-pow2 head dims never share an entry with pow2 ones
+    c.put("flash", "cpu", jnp.float32, ("1024", 80),
+          {"block_q": 64, "block_k": 64})
+    assert c.get("flash", "cpu", jnp.float32, ("1024", 64)) == {
+        "block_q": 512, "block_k": 512}
+    assert c.get("flash", "cpu", jnp.float32, ("1024", 80)) == {
+        "block_q": 64, "block_k": 64}
+
+
+def test_flash_config_routes_ragged_seq_via_ragged_bucket(monkeypatch):
+    seen = {}
+    orig = autotune._CACHE.peek
+
+    def spy(kind, backend, dtype, shape):
+        seen["shape"] = shape
+        return orig(kind, backend, dtype, shape)
+
+    monkeypatch.setattr(autotune._CACHE, "peek", spy)
+    autotune.flash_config("cpu", jnp.float32, 1000, 64)
+    assert seen["shape"] == ("1024r1000", 64)
+
+
+def test_offline_heuristic_is_per_kernel_capability():
+    """GPU lowers flash/fused but interprets SSD: the offline defaults
+    must follow the per-kind probe, not a platform aggregate."""
+    c = autotune.AutotuneCache("/nonexistent/never-loaded.json")
+    assert c.get("flash", "gpu", jnp.float32, (2048, 64)) == {
+        "block_q": 128, "block_k": 128}           # compiled heuristic
+    assert c.get("fused", "gpu", jnp.float32,
+                 (2048, 768))["block_rows"] == 128
+    # seq 64: compiled heuristic would say 128, interpreter caps at the
+    # bucket — SSD on gpu must take the interpreter branch
+    assert c.get("ssd", "gpu", jnp.float32, (64, 64, 32)) == {"chunk": 64}
+    assert c.get("ssd", "tpu", jnp.float32, (64, 64, 32)) == {"chunk": 128}
+
+
+def test_packaged_offline_table_consulted(monkeypatch):
+    """A measured entry checked into autotune_offline.json wins over the
+    heuristic for its exact key (and only that key)."""
+    key = autotune._key("flash", "tpu", jnp.float32, ("2048", 64))
+    monkeypatch.setattr(autotune, "_PACKAGED",
+                        {key: {"block_q": 256, "block_k": 256}})
+    c = autotune.AutotuneCache("/nonexistent/never-loaded.json")
+    assert c.get("flash", "tpu", jnp.float32, ("2048", 64)) == {
+        "block_q": 256, "block_k": 256}
+    assert c.get("flash", "tpu", jnp.float32, ("1024", 64)) == {
+        "block_q": 128, "block_k": 128}
 
 
 def test_autotune_persistence_roundtrip(tmp_path):
