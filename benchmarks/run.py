@@ -23,6 +23,10 @@ Emits ``name,us_per_call,derived`` CSV rows:
   recovery_policy    — per-policy recovery downtime (replan vs schedule
                        adaptation vs the per-event auto selector) across
                        the scenario families
+  serve_throughput   — serving plane: continuous batching vs static
+                       batching tokens/s + TTFT percentiles, and
+                       recovery downtime through an injected mid-decode
+                       failure (zero-recompile, bitwise streams)
 
 Machine-readable results are ALSO written to the repo root as
 ``BENCH_<suite>.json`` (roofline -> BENCH_kernels.json) so benchmark
@@ -43,9 +47,9 @@ def main() -> None:
     from benchmarks import (fig10_spot_traces, fig11_breakdown,
                             fused_epilogue, planning_scale,
                             recovery_latency, recovery_policy,
-                            roofline_report, step_time, sync_throughput,
-                            table2_throughput, table3_planning,
-                            table4_ckpt_ablation)
+                            roofline_report, serve_throughput, step_time,
+                            sync_throughput, table2_throughput,
+                            table3_planning, table4_ckpt_ablation)
     only = sys.argv[1] if len(sys.argv) > 1 else None
 
     def bench_json(name: str):
@@ -67,6 +71,7 @@ def main() -> None:
         "recovery_policy": (recovery_policy.main,
                             bench_json("recovery_policy")),
         "sync_throughput": (sync_throughput.main, bench_json("sync")),
+        "serve": (serve_throughput.main, bench_json("serve")),
     }
     if only is not None and only not in suites:
         print(f"unknown suite {only!r}; choose from: {', '.join(suites)}",

@@ -1,5 +1,7 @@
-"""Batched serving example: prefill + KV/SSM-cache decode across three
-model families (dense GQA, Mamba2 SSD, hybrid Hymba).
+"""Continuous-batching serving example across three model families
+(dense GQA, Mamba2 SSD, hybrid Hymba): slot-cache decode with
+in-program sampling, plus a node failure injected mid-traffic on the
+dense arch — every request still completes (runtime/serve_exec.py).
 
     PYTHONPATH=src python examples/serve_decode.py
 """
@@ -9,8 +11,10 @@ from repro.launch.serve import main as serve
 def main():
     for arch in ("qwen3-1.7b", "mamba2-780m", "hymba-1.5b"):
         print(f"\n=== {arch} ===")
+        fail = ["--fail-at", "3"] if arch == "qwen3-1.7b" else []
         serve(["--arch", arch, "--batch", "2", "--prompt-len", "8",
-               "--decode-steps", "8", "--layers", "2"])
+               "--decode-steps", "8", "--layers", "2", "--requests", "4",
+               *fail])
 
 
 if __name__ == "__main__":

@@ -12,6 +12,11 @@ Sources:
   * ``SyntheticLM``  — stateless hash-based token sampler (sample i is a
     pure function of (seed, i)); lets tests assert exactly-once delivery.
   * ``ByteCorpus``   — byte-level tokenizer over a text file, windowed.
+
+Each sample draws ``seq_len + 1`` tokens; ``batch()`` returns
+``tokens = arr[:, :-1]`` and the PRE-SHIFTED next-token targets
+``labels = arr[:, 1:]`` (``labels[:, t]`` is the target for position
+``t``).  Losses consume labels as-is — no internal shift anywhere.
 """
 from __future__ import annotations
 
@@ -38,7 +43,7 @@ class SyntheticLM:
 
     def batch(self, indices: Sequence[int]) -> Dict[str, np.ndarray]:
         arr = np.stack([self.sample(i) for i in indices])
-        return {"tokens": arr[:, :-1], "labels": arr[:, :-1],
+        return {"tokens": arr[:, :-1], "labels": arr[:, 1:],
                 "_indices": np.asarray(indices, np.int64)}
 
 
@@ -60,7 +65,7 @@ class ByteCorpus:
 
     def batch(self, indices: Sequence[int]) -> Dict[str, np.ndarray]:
         arr = np.stack([self.sample(i) for i in indices])
-        return {"tokens": arr[:, :-1], "labels": arr[:, :-1],
+        return {"tokens": arr[:, :-1], "labels": arr[:, 1:],
                 "_indices": np.asarray(indices, np.int64)}
 
 

@@ -189,7 +189,10 @@ def init_kv_cache(arch: ArchConfig, batch: int, max_len: int, dtype):
 
 def decode_attention(params, arch: ArchConfig, x: jax.Array, cache: dict,
                      pos: jax.Array, constrain=None) -> Tuple[jax.Array, dict]:
-    """One-token decode. x: [B, 1, d]; pos: [] scalar current position.
+    """One-token decode. x: [B, 1, d]; pos: [] scalar current position,
+    or [B] per-example positions (the serving plane's slot caches: every
+    slot decodes at its own offset, so the cache write is a per-row
+    scatter and the validity mask is per-row).
 
     With a sliding window the cache is a ring buffer of window size;
     otherwise it is the full sequence.  ``constrain`` (optional) pins
@@ -197,7 +200,10 @@ def decode_attention(params, arch: ArchConfig, x: jax.Array, cache: dict,
     GSPMD updates the cache in place instead of gathering it per layer.
     """
     B = x.shape[0]
-    positions = jnp.broadcast_to(pos[None], (B, 1))
+    pos = jnp.asarray(pos)
+    vec = pos.ndim == 1                       # per-slot positions
+    positions = (pos[:, None] if vec
+                 else jnp.broadcast_to(pos[None], (B, 1)))
     q, k, v = _project_qkv(params, arch, x, positions)
     if constrain is not None:
         q = constrain(q, "heads4d")
@@ -205,8 +211,13 @@ def decode_attention(params, arch: ArchConfig, x: jax.Array, cache: dict,
         v = constrain(v, "heads4d")
     cache_len = cache["k"].shape[1]
     slot = (pos % cache_len) if arch.sliding_window else pos
-    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    if vec:
+        rows = jnp.arange(B)
+        ck = cache["k"].at[rows, slot].set(k[:, 0])
+        cv = cache["v"].at[rows, slot].set(v[:, 0])
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
     KV, hd = arch.num_kv_heads, arch.head_dim
     H = arch.num_heads
     G = H // KV
@@ -214,11 +225,19 @@ def decode_attention(params, arch: ArchConfig, x: jax.Array, cache: dict,
     scores = jnp.einsum("bkgd,bskd->bkgs", qg, ck).astype(jnp.float32)
     scores = scores / jnp.sqrt(hd)
     idx = jnp.arange(cache_len)
-    if arch.sliding_window:
-        valid = (idx <= slot) | (pos >= cache_len)   # ring buffer filled
+    if vec:
+        if arch.sliding_window:
+            valid = (idx[None] <= slot[:, None]) | (pos[:, None] >= cache_len)
+        else:
+            valid = idx[None] <= pos[:, None]
+        valid = valid[:, None, None, :]       # [B, 1, 1, cache_len]
     else:
-        valid = idx <= pos
-    scores = jnp.where(valid[None, None, None], scores, -jnp.inf)
+        if arch.sliding_window:
+            valid = (idx <= slot) | (pos >= cache_len)  # ring buffer filled
+        else:
+            valid = idx <= pos
+        valid = valid[None, None, None]
+    scores = jnp.where(valid, scores, -jnp.inf)
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     o = jnp.einsum("bkgs,bskd->bkgd", probs, cv).reshape(B, 1, H * hd)
     out = o @ params["wo"].astype(x.dtype)

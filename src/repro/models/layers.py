@@ -95,13 +95,16 @@ def fused_cross_entropy(x: jax.Array, table: jax.Array, labels: jax.Array,
     [B, chunk, V] block at a time.  At vocab 152k this is the difference
     between ~GBs and ~TBs of activation memory at train_4k scale.
 
-    x: [B, S, d] (pre-head hidden states), labels: [B, S]; the shift
-    (predict t+1 from t) happens here.
+    x: [B, S, d] (pre-head hidden states), labels: [B, S] PRE-SHIFTED
+    next-token targets (labels[:, t] is the target for position t — the
+    data pipeline emits ``arr[:, 1:]``); no shift happens here.  The
+    final position is excluded from the mean (same S-1 reduction as the
+    non-chunked training path).
     """
     B, S, d = x.shape
     xs = x[:, :-1]
-    ls = labels[:, 1:]
-    ms = (mask[:, 1:] if mask is not None
+    ls = labels[:, :-1]
+    ms = (mask[:, :-1] if mask is not None
           else jnp.ones_like(ls, jnp.float32))
     n = S - 1
     c = min(chunk, n)
@@ -132,7 +135,9 @@ def fused_cross_entropy(x: jax.Array, table: jax.Array, labels: jax.Array,
 
 def cross_entropy(logits: jax.Array, labels: jax.Array,
                   mask: Optional[jax.Array] = None) -> jax.Array:
-    """Mean token NLL; ``mask`` (0/1) excludes e.g. frontend positions."""
+    """Mean token NLL; ``mask`` (0/1) excludes e.g. frontend positions.
+    ``labels`` are pre-shifted next-token targets aligned with
+    ``logits`` (labels[..., t] is the target for position t)."""
     logits = logits.astype(jnp.float32)
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]

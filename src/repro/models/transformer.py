@@ -209,6 +209,11 @@ class Model:
         return self.constrain(logits, "logits"), aux
 
     def loss(self, params: Dict, batch: Dict) -> Tuple[jax.Array, Dict]:
+        # labels are PRE-SHIFTED next-token targets (labels[:, t] is the
+        # target for position t) — the data pipeline emits arr[:, 1:].
+        # The final position is excluded from the mean: keeping the
+        # reduction at S-1 positions preserves bit-exact compiled/eager
+        # parity (test_executor.py) across the labels-convention change.
         labels = batch["labels"]
         coef = (self.arch.moe.router_aux_loss_coef
                 if self.arch.moe is not None else 0.0)
@@ -228,8 +233,9 @@ class Model:
             ft = logits.shape[1] - labels.shape[1]
             if ft:
                 logits = logits[:, ft:]
-            nll = cross_entropy(logits[:, :-1], labels[:, 1:],
-                                batch.get("mask", None))
+            mask = batch.get("mask", None)
+            nll = cross_entropy(logits[:, :-1], labels[:, :-1],
+                                mask[:, :-1] if mask is not None else None)
         total = nll + coef * aux
         return total, {"nll": nll, "aux": aux}
 
@@ -292,8 +298,10 @@ class Model:
 
     def decode_step(self, params: Dict, token: jax.Array, cache: Dict,
                     pos: jax.Array) -> Tuple[jax.Array, Dict]:
-        """token: [b, 1] int32; pos: scalar int32 current position.
-        Returns (logits [b, 1, V], new stacked cache)."""
+        """token: [b, 1] int32; pos: scalar int32 current position, or
+        [b] int32 per-example positions (serving slot caches decode each
+        row at its own offset).  Returns (logits [b, 1, V], new stacked
+        cache)."""
         x = embed(params["embed"], token, self.dtype)
         x = self.constrain(x, "act")
 

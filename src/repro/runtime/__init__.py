@@ -7,6 +7,8 @@ from repro.runtime.schedule import (ScheduleError, adapt_reroute,
                                     adapted_flat_schedule, adapted_per_stage,
                                     flat_schedule, one_f_one_b,
                                     simulate_makespan)
+from repro.runtime.serve_exec import (SamplingParams, ServeExecutor,
+                                      ServeRequest)
 from repro.runtime.sharding import ShardingStrategy
 from repro.runtime import spmd
 from repro.runtime.spmd import SPMDExecutor
@@ -21,6 +23,7 @@ __all__ = ["Executor", "ExecutorUnsupported", "ProgramCache",
            "ScheduleError", "adapt_reroute", "adapted_flat_schedule",
            "adapted_per_stage", "flat_schedule", "one_f_one_b",
            "simulate_makespan",
+           "SamplingParams", "ServeExecutor", "ServeRequest",
            "ShardingStrategy", "spmd", "SPMDExecutor", "BucketedSync",
            "BucketExec", "perlayer_global_sumsq", "perlayer_sync",
            "Topology", "TransferPlan", "TransferPlanError",

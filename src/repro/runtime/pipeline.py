@@ -120,7 +120,10 @@ def make_stage_fn(model: Model, kinds: Sequence[str]) -> Callable:
                 ft = logits.shape[1] - labels.shape[1]
                 if ft:
                     logits = logits[:, ft:]
-                nll = cross_entropy(logits[:, :-1], labels[:, 1:])
+                # labels are pre-shifted next-token targets; the final
+                # position is excluded from the mean (S-1 reduction,
+                # bit-exact compiled/eager parity)
+                nll = cross_entropy(logits[:, :-1], labels[:, :-1])
                 coef = (arch.moe.router_aux_loss_coef
                         if arch.moe is not None else 0.0)
                 return nll + coef * aux, nll

@@ -1,0 +1,686 @@
+"""Resilient serving data plane: continuous batching + template-based
+inference fault tolerance (DESIGN.md §14).
+
+Training got the paper's property in PR 2/3: recovery is a TABLE LOOKUP
+because templates are precomputed (§4) and programs are precompiled
+(§8).  This module gives SERVING the same property.  A ``ServeExecutor``
+registers with the engine/monitor exactly like the trainers do
+(Executor interface: bind / step / recover / join / snapshot), and every
+``engine.instances`` entry becomes a decode-pipeline REPLICA with a
+fixed-shape slot state:
+
+    cache   model.init_cache(num_slots, max_len)   [L, B, ...] per leaf
+    tok     [B] int32    last token per slot (next decode input)
+    pos     [B] int32    absolute position per slot
+    ngen    [B] int32    generated-token count per slot
+    keys    [B, 2] u32   per-request PRNG base key per slot
+    out     [B, cap] i32 generated-token ring (host harvests on finish)
+
+Continuous batching (Orca-style) then NEVER changes a program's shapes:
+admission teacher-forces a prompt into ONE slot (a scan of the very same
+full-batch decode tick, other rows masked frozen), eviction is pure host
+bookkeeping, and the decode tick is one donated compiled program with
+in-program sampling — temperature/top-k, per-slot key folding — so the
+steady-state loop does ZERO device->host syncs (the
+``track_host_transfers`` contract) and ZERO recompiles (ProgramCache
+keys are (kind, backend_signature, shapes) — DESIGN.md §8 discipline:
+admit/evict mutate buffer CONTENTS only).
+
+Sampling determinism is the recovery keystone: the token at generated
+index ``n`` of a request with base key ``k`` is sampled with
+``fold_in(k, P + n - 1)`` (P = prompt length) — a pure function of the
+request and the position, never of batch composition or wall clock.  A
+mid-decode failure therefore resumes bitwise-identically:
+
+  fail event -> engine.handle_failure() replans instances from the
+  precomputed template set (table lookup) -> surviving replicas inherit
+  their slot state (max node-overlap matching) -> requests on dissolved
+  replicas MIGRATE their cache rows to free slots (extract/install
+  programs + CopyTasks scheduled through runtime/transfer.py's
+  topology-aware streams, exactly like training state copies) ->
+  requests whose layers lost every owner REPLAY by teacher-forcing the
+  host-known prefix (prompt + already-streamed tokens) -> decode
+  continues.  All through programs warmed at bootstrap:
+  ``track_compiles`` asserts backend_compiles == 0 across the whole
+  fail -> recover -> drain cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.reconfigure import CopyTask, PipelineInstance
+from repro.kernels import ops as kops
+from repro.models import Model
+from repro.runtime.executor import (Executor, ProgramCache, avals_of,
+                                    tree_spec)
+from repro.runtime.transfer import schedule_transfers
+
+
+# ----------------------------------------------------------------------
+# Requests + sampling
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class SamplingParams:
+    temperature: float = 0.0
+    top_k: int = 0                   # 0 = full vocab
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    rid: int
+    prompt: np.ndarray               # [P] int32
+    max_new: int                     # TOTAL generated tokens requested
+    arrival_s: float = 0.0
+    first_token_s: Optional[float] = None
+    done_s: Optional[float] = None
+    tokens: Optional[np.ndarray] = None     # filled on completion
+    # tokens already emitted before a replay (streamed to the client;
+    # teacher-forced back in, never regenerated)
+    prior: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0,), np.int32))
+    replays: int = 0
+    migrations: int = 0
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new - len(self.prior)
+
+
+def _sample_tokens(logits, keys, pos, temp, top_k: int):
+    """In-program sampling: [B, V] fp32 logits -> [B] int32 tokens.
+
+    Per-row key = fold_in(row base key, row position): a pure function
+    of (request, position), so replay/migration reproduce the stream at
+    ANY temperature.  vmapped per row so the math of one row is
+    identical whether it runs in a [1]- or [B]-shaped program.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if top_k:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+
+    def one(lg, key, p):
+        k = jax.random.fold_in(key, p)
+        return jax.random.categorical(k, lg / jnp.maximum(temp, 1e-6))
+
+    sampled = jax.vmap(one)(logits, keys, pos).astype(jnp.int32)
+    return jnp.where(temp > 0, sampled, greedy)
+
+
+# ----------------------------------------------------------------------
+# Replica: one engine instance + its slot state
+# ----------------------------------------------------------------------
+class _Replica:
+    def __init__(self, instance: PipelineInstance, num_slots: int, state):
+        self.instance = instance
+        self.cache, self.tok, self.pos, self.ngen, self.keys, self.out = state
+        self.requests: List[Optional[ServeRequest]] = [None] * num_slots
+        self.ngen_h = np.zeros(num_slots, np.int64)   # host shadow
+
+    def active_mask(self) -> np.ndarray:
+        return np.array([r is not None for r in self.requests], bool)
+
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.requests) if r is None]
+
+    def state(self):
+        return (self.cache, self.tok, self.pos, self.ngen, self.keys,
+                self.out)
+
+    def lost_layers(self, dead: Set[str]) -> List[int]:
+        """Layers whose every serving owner died (cache unrecoverable)."""
+        return [l for l in range(self.instance.template.num_layers)
+                if set(self.instance.layer_owners(l)) <= dead]
+
+
+# ----------------------------------------------------------------------
+# The executor
+# ----------------------------------------------------------------------
+class ServeExecutor(Executor):
+    """Continuous-batching serving runtime behind the Executor seam.
+
+    ``engine.instances`` are the decode-pipeline replicas; the template
+    describes stage placement/ownership for fault tolerance while the
+    compiled programs are keyed ONLY by (kind, backend, shapes) — a
+    replan swaps bookkeeping, never programs.
+    """
+
+    def __init__(self, model: Model, params: Dict, engine, *,
+                 num_slots: int = 4, max_len: int = 64,
+                 max_new_cap: int = 32,
+                 sampling: Optional[SamplingParams] = None,
+                 prompt_buckets: Optional[Sequence[int]] = None,
+                 sample_key: Optional[jax.Array] = None,
+                 admission: str = "continuous",
+                 cache: Optional[ProgramCache] = None,
+                 clock: Callable[[], float] = time.perf_counter):
+        assert admission in ("continuous", "static")
+        self.model = model
+        self.params = params
+        self.engine = engine
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.cap = max_new_cap
+        self.sampling = sampling or SamplingParams()
+        self.admission = admission
+        self.cache = cache or ProgramCache()
+        self.clock = clock
+        self.sample_key = (sample_key if sample_key is not None
+                           else jax.random.PRNGKey(0))
+        if prompt_buckets is None:
+            prompt_buckets, b = [], 8
+            while b < max_len:
+                prompt_buckets.append(b)
+                b *= 2
+            prompt_buckets.append(max_len)
+        self.buckets = sorted(set(prompt_buckets))
+        assert self.buckets[-1] >= max_len, "buckets must cover max_len"
+
+        self.queue: "deque[ServeRequest]" = deque()
+        self.completed: List[ServeRequest] = []
+        self.replicas: List[_Replica] = []
+        self.ticks = 0
+        self._next_rid = 0
+        self.last_recovery: Optional[Dict] = None
+        engine.attach_executor(self)
+        self.bind()
+
+    # ------------------------------------------------------------------
+    # Executor interface
+    # ------------------------------------------------------------------
+    def bind(self) -> None:
+        """Fresh replicas for the current instance set + warm every
+        program the serving plane can ever need (§8: compile at
+        bootstrap so recovery never compiles)."""
+        self.replicas = [
+            _Replica(inst, self.num_slots, self._fresh_state())
+            for inst in self.engine.instances]
+        self.warm()
+
+    def step(self, batches=None) -> Dict:
+        return self.tick()
+
+    def snapshot(self, data_state: Optional[Dict] = None,
+                 rng_seed: int = 0):
+        return {
+            "ticks": self.ticks,
+            "completed": [r.rid for r in self.completed],
+            "in_flight": [r.rid for rep in self.replicas
+                          for r in rep.requests if r is not None],
+            "queued": [r.rid for r in self.queue],
+            "cache": self.cache.stats.as_dict(),
+        }
+
+    # ------------------------------------------------------------------
+    # Request lifecycle
+    # ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new: int,
+               rid: Optional[int] = None) -> ServeRequest:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) + max_new > self.max_len:
+            raise ValueError(
+                f"prompt({len(prompt)}) + max_new({max_new}) exceeds "
+                f"max_len({self.max_len})")
+        if max_new > self.cap:
+            raise ValueError(f"max_new({max_new}) > out cap({self.cap})")
+        if rid is None:
+            rid = self._next_rid
+        self._next_rid = max(self._next_rid, rid) + 1
+        req = ServeRequest(rid=rid, prompt=prompt, max_new=max_new,
+                           arrival_s=self.clock())
+        self.queue.append(req)
+        return req
+
+    def tick(self) -> Dict:
+        """One scheduler round: admit, one batched decode step per
+        replica, harvest finished slots.  The decode inner loop does no
+        device->host transfer; completions are detected from host
+        shadows and only then is the finished row fetched."""
+        admitted = 0
+        for rep in self.replicas:
+            free = rep.free_slots()
+            if self.admission == "static" and len(free) < self.num_slots:
+                free = []           # static baseline: drain, then refill
+            for slot in free:
+                if not self.queue:
+                    break
+                self._admit(rep, slot, self.queue.popleft())
+                admitted += 1
+        decoded = 0
+        for rep in self.replicas:
+            active = rep.active_mask()
+            if not active.any():
+                continue
+            prog = self._decode_program()
+            rep.cache, rep.tok, rep.pos, rep.ngen, rep.out = prog(
+                self.params, rep.cache, rep.tok, rep.pos, rep.ngen,
+                rep.keys, jnp.asarray(active),
+                jnp.asarray(self.sampling.temperature, jnp.float32),
+                rep.out)
+            rep.ngen_h[active] += 1
+            decoded += int(active.sum())
+        finished = 0
+        for rep in self.replicas:
+            for slot, req in enumerate(rep.requests):
+                if req is not None and rep.ngen_h[slot] >= req.remaining:
+                    self._harvest(rep, slot)
+                    finished += 1
+        self.ticks += 1
+        return {"admitted": admitted, "decoded": decoded,
+                "finished": finished}
+
+    def drain(self, max_ticks: int = 10_000) -> None:
+        for _ in range(max_ticks):
+            if not self.queue and not any(r.active_mask().any()
+                                          for r in self.replicas):
+                return
+            self.tick()
+        raise RuntimeError(f"not drained after {max_ticks} ticks")
+
+    def _base_key(self, rid: int) -> jax.Array:
+        return jax.random.fold_in(self.sample_key, rid & 0xFFFFFFFF)
+
+    def _admit(self, rep: _Replica, slot: int, req: ServeRequest) -> None:
+        """Teacher-force prompt + any replay prefix into ``slot`` via the
+        bucketed admit program (the same full-batch decode tick, other
+        rows frozen), then sample the first new token in-program."""
+        if req.remaining <= 0:      # replayed request already had all
+            req.tokens = req.prior  # its tokens streamed pre-failure
+            req.done_s = req.done_s or self.clock()
+            self.completed.append(req)
+            return
+        prefix = np.concatenate([req.prompt, req.prior]).astype(np.int32)
+        plen = len(prefix)
+        bucket = next(b for b in self.buckets if b >= plen)
+        padded = np.zeros(bucket, np.int32)
+        padded[:plen] = prefix
+        prog = self._admit_program(bucket)
+        state = prog(self.params, *rep.state(),
+                     jnp.asarray(slot, jnp.int32), jnp.asarray(padded),
+                     jnp.asarray(plen, jnp.int32), self._base_key(req.rid),
+                     jnp.asarray(self.sampling.temperature, jnp.float32))
+        (rep.cache, rep.tok, rep.pos, rep.ngen, rep.keys,
+         rep.out) = state
+        rep.requests[slot] = req
+        rep.ngen_h[slot] = 1
+        rep.tok.block_until_ready()          # TTFT is an honest wall time
+        if req.first_token_s is None:
+            req.first_token_s = self.clock()
+
+    def _harvest(self, rep: _Replica, slot: int) -> None:
+        req = rep.requests[slot]
+        # admission + the same tick's decode can overshoot remaining by
+        # one row entry; the client asked for max_new, slice to it
+        n = min(int(rep.ngen_h[slot]), req.remaining)
+        row = np.asarray(rep.out[slot])      # the ONLY steady-state D2H
+        req.tokens = np.concatenate([req.prior, row[:n]])
+        req.done_s = self.clock()
+        self.completed.append(req)
+        rep.requests[slot] = None
+        rep.ngen_h[slot] = 0
+
+    # ------------------------------------------------------------------
+    # Fault tolerance
+    # ------------------------------------------------------------------
+    def recover(self, dead: Set[str], drained: bool = False) -> Dict:
+        """Fail event mid-traffic: replan decode pipelines from the
+        template set, migrate live cache rows, replay what died —
+        zero recompilation end to end."""
+        t0 = self.clock()
+        dead = set(dead)
+        old = self.replicas
+        self.engine.handle_failure(dead, drained=drained)
+        info = self._rebind(old, dead)
+        info.update(policy="replan", downtime_s=self.clock() - t0,
+                    cache=self.cache.stats.as_dict())
+        self.last_recovery = info
+        return info
+
+    def join(self, nodes: List[str]) -> Dict:
+        t0 = self.clock()
+        old = self.replicas
+        self.engine.handle_join(list(nodes))
+        info = self._rebind(old, set())
+        info.update(policy="join", downtime_s=self.clock() - t0)
+        self.last_recovery = info
+        return info
+
+    def _rebind(self, old: List[_Replica], dead: Set[str]) -> Dict:
+        """Map the engine's NEW instance set onto the old replicas by
+        max node overlap; inherited replicas keep their slot state
+        (shapes never changed, so the programs are the same cache
+        entries), dissolved replicas migrate or replay their requests."""
+        pairs = sorted(
+            ((len(set(inst.nodes) & (set(r.instance.nodes) - dead)), ni, oi)
+             for ni, inst in enumerate(self.engine.instances)
+             for oi, r in enumerate(old)),
+            key=lambda t: (-t[0], t[1], t[2]))
+        match: Dict[int, int] = {}
+        used: Set[int] = set()
+        for score, ni, oi in pairs:
+            if score <= 0 or ni in match or oi in used:
+                continue
+            match[ni] = oi
+            used.add(oi)
+
+        copy_tasks: List[CopyTask] = []
+        replay: List[ServeRequest] = []
+        migrate: List[Tuple[_Replica, int, ServeRequest]] = []
+        new_replicas: List[_Replica] = []
+        row_bytes = self._row_bytes_per_layer()
+
+        for ni, inst in enumerate(self.engine.instances):
+            if ni not in match:
+                new_replicas.append(
+                    _Replica(inst, self.num_slots, self._fresh_state()))
+                continue
+            src = old[match[ni]]
+            rep = _Replica(inst, self.num_slots, src.state())
+            rep.requests = list(src.requests)
+            rep.ngen_h = src.ngen_h.copy()
+            lost = set(src.lost_layers(dead))
+            if lost:
+                # some layer's cache has no surviving owner: every
+                # in-flight request on this replica must replay
+                for slot, req in enumerate(rep.requests):
+                    if req is not None:
+                        replay.append(self._prepare_replay(src, slot, req))
+                rep.requests = [None] * self.num_slots
+                rep.ngen_h[:] = 0
+            else:
+                active = int(rep.active_mask().sum())
+                for layer in range(inst.template.num_layers):
+                    prev = set(src.instance.layer_owners(layer)) - dead
+                    for dst in inst.layer_owners(layer):
+                        if dst in prev or not active:
+                            continue
+                        copy_tasks.append(CopyTask(
+                            layer, min(prev), dst, row_bytes * active,
+                            sources=tuple(sorted(prev))))
+            new_replicas.append(rep)
+
+        for oi, src in enumerate(old):
+            if oi in used:
+                continue
+            # dissolved replica: rows migrate if every layer survives
+            # somewhere, else the requests replay from the host prefix
+            lost = set(src.lost_layers(dead))
+            for slot, req in enumerate(src.requests):
+                if req is None:
+                    continue
+                if lost:
+                    replay.append(self._prepare_replay(src, slot, req))
+                else:
+                    migrate.append((src, slot, req))
+
+        self.replicas = new_replicas
+        migrated = 0
+        for src, slot, req in migrate:
+            target = next(((rep, s) for rep in self.replicas
+                           for s in rep.free_slots()), None)
+            if target is None:
+                replay.append(self._prepare_replay(src, slot, req))
+                continue
+            rep, dst_slot = target
+            self._migrate_row(src, slot, rep, dst_slot, req)
+            for layer in range(rep.instance.template.num_layers):
+                srcs = tuple(sorted(
+                    set(src.instance.layer_owners(layer)) - dead))
+                for dst in rep.instance.layer_owners(layer):
+                    copy_tasks.append(CopyTask(layer, srcs[0], dst,
+                                               row_bytes, sources=srcs))
+            req.migrations += 1
+            migrated += 1
+
+        # the modeled data plane: same topology-aware streams training
+        # state copies ride (validated, makespan = max over streams)
+        plan = (schedule_transfers(copy_tasks, self.engine.topology,
+                                   dead=dead) if copy_tasks else None)
+        for req in reversed(replay):        # preserve original order
+            req.replays += 1
+            self.queue.appendleft(req)
+        return {
+            "migrated": migrated, "replayed": len(replay),
+            "copy_bytes": sum(t.nbytes for t in copy_tasks),
+            "transfer_makespan_s": plan.makespan() if plan else 0.0,
+            "replicas": len(self.replicas),
+        }
+
+    def _prepare_replay(self, rep: _Replica, slot: int,
+                        req: ServeRequest) -> ServeRequest:
+        """Fold the already-streamed tokens (host-known: they went to the
+        client) into the replay prefix; they are teacher-forced back and
+        never regenerated, so the stream stays bitwise-identical."""
+        n = int(rep.ngen_h[slot])
+        if n:
+            row = np.asarray(rep.out[slot])
+            req.prior = np.concatenate([req.prior, row[:n]])
+        return req
+
+    def _migrate_row(self, src: _Replica, src_slot: int, dst: _Replica,
+                     dst_slot: int, req: ServeRequest) -> None:
+        ext = self._extract_program()
+        row, orow, tok, pos, ngen, key = ext(
+            src.cache, src.tok, src.pos, src.ngen, src.keys, src.out,
+            jnp.asarray(src_slot, jnp.int32))
+        ins = self._install_program()
+        state = ins(*dst.state(), row, orow,
+                    jnp.asarray(dst_slot, jnp.int32), tok, pos, ngen, key)
+        (dst.cache, dst.tok, dst.pos, dst.ngen, dst.keys, dst.out) = state
+        dst.requests[dst_slot] = req
+        dst.ngen_h[dst_slot] = src.ngen_h[src_slot]
+
+    # ------------------------------------------------------------------
+    # Programs (all AOT through the ProgramCache; §8 key discipline)
+    # ------------------------------------------------------------------
+    def _fresh_state(self):
+        B, cap = self.num_slots, self.cap
+        return (self.model.init_cache(B, self.max_len),
+                jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.int32),
+                jnp.zeros((B,), jnp.int32), jnp.zeros((B, 2), jnp.uint32),
+                jnp.zeros((B, cap), jnp.int32))
+
+    def _state_avals(self):
+        return self._state_template()
+
+    def _state_template(self):
+        # shapes only — computed once (static config)
+        if getattr(self, "_state_tpl", None) is not None:
+            return self._state_tpl
+        B, cap = self.num_slots, self.cap
+        cache = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+            avals_of(self.model.init_cache(1, self.max_len)))
+        cache = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((s.shape[0], B) + s.shape[2:],
+                                           s.dtype), cache)
+        self._state_tpl = (
+            cache,
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B, 2), jnp.uint32),
+            jax.ShapeDtypeStruct((B, cap), jnp.int32))
+        return self._state_tpl
+
+    def _key_base(self) -> Tuple:
+        if getattr(self, "_kb", None) is None:
+            self._kb = (kops.backend_signature(),
+                        tree_spec(avals_of(self.params)),
+                        tree_spec(self._state_avals()[0]), self.num_slots,
+                        self.cap, self.sampling.top_k)
+        return self._kb
+
+    def _decode_program(self):
+        key = ("serve_decode",) + self._key_base()
+
+        def build():
+            cap = self.cap
+
+            def fn(params, cache, tok, pos, ngen, keys, active, temp, out):
+                logits, cache2 = self.model.decode_step(
+                    params, tok[:, None], cache, pos)
+                nxt = _sample_tokens(logits[:, 0], keys, pos, temp,
+                                     self.sampling.top_k)
+                nxt = jnp.where(active, nxt, tok)
+                hit = active[:, None] & (jnp.arange(cap)[None, :]
+                                         == ngen[:, None])
+                out2 = jnp.where(hit, nxt[:, None], out)
+                inc = active.astype(jnp.int32)
+                return cache2, nxt, pos + inc, ngen + inc, out2
+
+            cache_s, tok_s, pos_s, ngen_s, keys_s, out_s = \
+                self._state_avals()
+            return jax.jit(fn, donate_argnums=(1, 2, 3, 4, 8)).lower(
+                avals_of(self.params), cache_s, tok_s, pos_s, ngen_s,
+                keys_s, jax.ShapeDtypeStruct((self.num_slots,), jnp.bool_),
+                jax.ShapeDtypeStruct((), jnp.float32), out_s).compile()
+
+        return self.cache.get_or_build(key, build)
+
+    def _admit_program(self, bucket: int):
+        key = ("serve_admit", bucket) + self._key_base()
+
+        def build():
+            B, cap = self.num_slots, self.cap
+            V = self.model.arch.vocab_size
+
+            def fn(params, cache, tok, pos, ngen, keys, out, slot,
+                   prompt, plen, base_key, temp):
+                rows = jnp.arange(B)
+                # evict the previous occupant: zero the slot's row so
+                # stale SSM/conv running state cannot leak into the new
+                # request (attention is position-masked, SSM is not)
+                cache = jax.tree.map(lambda c: c * (rows != slot).reshape(
+                    (1, B) + (1,) * (c.ndim - 2)).astype(c.dtype), cache)
+
+                def body(carry, t):
+                    cache, last = carry
+                    tok2 = tok.at[slot].set(prompt[t])
+                    pos2 = pos.at[slot].set(t)
+                    lg, nc = self.model.decode_step(
+                        params, tok2[:, None], cache, pos2)
+                    keep = ((rows == slot) & (t < plen))
+                    cache = jax.tree.map(
+                        lambda a, b: jnp.where(
+                            keep.reshape((1, B) + (1,) * (a.ndim - 2)),
+                            a, b), nc, cache)
+                    last = jnp.where(t == plen - 1, lg[slot, 0], last)
+                    return (cache, last), None
+
+                (cache, last), _ = jax.lax.scan(
+                    body, (cache, jnp.zeros((V,), jnp.float32)),
+                    jnp.arange(bucket, dtype=jnp.int32))
+                first = _sample_tokens(last[None], base_key[None],
+                                       (plen - 1)[None], temp,
+                                       self.sampling.top_k)[0]
+                return (cache, tok.at[slot].set(first),
+                        pos.at[slot].set(plen), ngen.at[slot].set(1),
+                        keys.at[slot].set(base_key),
+                        out.at[slot].set(
+                            jnp.zeros((cap,), jnp.int32).at[0].set(first)))
+
+            cache_s, tok_s, pos_s, ngen_s, keys_s, out_s = \
+                self._state_avals()
+            return jax.jit(fn, donate_argnums=(1, 2, 3, 4, 5, 6)).lower(
+                avals_of(self.params), cache_s, tok_s, pos_s, ngen_s,
+                keys_s, out_s, jax.ShapeDtypeStruct((), jnp.int32),
+                jax.ShapeDtypeStruct((bucket,), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32),
+                jax.ShapeDtypeStruct((2,), jnp.uint32),
+                jax.ShapeDtypeStruct((), jnp.float32)).compile()
+
+        return self.cache.get_or_build(key, build)
+
+    def _extract_program(self):
+        key = ("serve_extract",) + self._key_base()
+
+        def build():
+            def fn(cache, tok, pos, ngen, keys, out, slot):
+                row = jax.tree.map(
+                    lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1,
+                                                           axis=1), cache)
+                return (row, out[slot], tok[slot], pos[slot], ngen[slot],
+                        keys[slot])
+
+            cache_s, tok_s, pos_s, ngen_s, keys_s, out_s = \
+                self._state_avals()
+            return jax.jit(fn).lower(
+                cache_s, tok_s, pos_s, ngen_s, keys_s, out_s,
+                jax.ShapeDtypeStruct((), jnp.int32)).compile()
+
+        return self.cache.get_or_build(key, build)
+
+    def _install_program(self):
+        key = ("serve_install",) + self._key_base()
+
+        def build():
+            def fn(cache, tok, pos, ngen, keys, out, row, orow, slot,
+                   tok_s, pos_s, ngen_s, key_s):
+                cache2 = jax.tree.map(
+                    lambda c, r: jax.lax.dynamic_update_slice_in_dim(
+                        c, r, slot, axis=1), cache, row)
+                return (cache2, tok.at[slot].set(tok_s),
+                        pos.at[slot].set(pos_s), ngen.at[slot].set(ngen_s),
+                        keys.at[slot].set(key_s), out.at[slot].set(orow))
+
+            cache_s, tok_s, pos_s, ngen_s, keys_s, out_s = \
+                self._state_avals()
+            row_s = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    (s.shape[0], 1) + s.shape[2:], s.dtype), cache_s)
+            return jax.jit(fn, donate_argnums=(0, 1, 2, 3, 4, 5)).lower(
+                cache_s, tok_s, pos_s, ngen_s, keys_s, out_s, row_s,
+                jax.ShapeDtypeStruct((self.cap,), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32),
+                jax.ShapeDtypeStruct((2,), jnp.uint32)).compile()
+
+        return self.cache.get_or_build(key, build)
+
+    def _row_bytes_per_layer(self) -> int:
+        cache_s, *_ = self._state_avals()
+        return sum(int(np.prod(s.shape[2:])) * np.dtype(s.dtype).itemsize
+                   for s in jax.tree.leaves(cache_s))
+
+    # ------------------------------------------------------------------
+    def warm(self) -> None:
+        """Compile every program AND exercise every host-side glue
+        dispatch (zeros init, key folding, mask upload, row fetch) with
+        one synthetic request on a scratch replica, so a later failure
+        -> recover -> drain cycle triggers ZERO backend compiles."""
+        self._decode_program()
+        for b in self.buckets:
+            self._admit_program(b)
+        self._extract_program()
+        self._install_program()
+        if not self.replicas:
+            return
+        rep = _Replica(self.replicas[0].instance, self.num_slots,
+                       self._fresh_state())
+        req = ServeRequest(rid=-1, prompt=np.zeros(1, np.int32), max_new=1)
+        clock, self.clock = self.clock, lambda: 0.0
+        try:
+            self._admit(rep, 0, req)
+            prog = self._decode_program()
+            rep.cache, rep.tok, rep.pos, rep.ngen, rep.out = prog(
+                self.params, rep.cache, rep.tok, rep.pos, rep.ngen,
+                rep.keys, jnp.asarray(rep.active_mask()),
+                jnp.asarray(0.0, jnp.float32), rep.out)
+            rep.ngen_h[0] += 1
+            self._prepare_replay(rep, 0, req)       # warm the row fetch
+            self._harvest(rep, 0)
+            self._migrate_row(rep, 0, rep, 1, req)  # warm extract/install
+            self._base_key(0)
+        finally:
+            self.clock = clock
+            self.completed = [r for r in self.completed if r.rid != -1]

@@ -110,7 +110,7 @@ def pipeline_loss(model: Model, params: Dict, tokens_mb: jax.Array,
     transposes into the reverse-order backward pipeline."""
     from repro.models.layers import cross_entropy
     logits = pipeline_logits(model, params, tokens_mb, mesh, stage_axis)
-    nll = jax.vmap(lambda lg, lb: cross_entropy(lg[:, :-1], lb[:, 1:]))(
+    nll = jax.vmap(lambda lg, lb: cross_entropy(lg[:, :-1], lb[:, :-1]))(
         logits, labels_mb)
     return jnp.mean(nll)
 

@@ -74,7 +74,7 @@ TRAIN_SCRIPT = textwrap.dedent("""
 
     def ref_loss(p):
         nll = jnp.stack([cross_entropy(model.forward(p, tokens[i])[0][:, :-1],
-                                       labels[i][:, 1:]) for i in range(M)])
+                                       labels[i][:, :-1]) for i in range(M)])
         return jnp.mean(nll)
 
     with mesh:
