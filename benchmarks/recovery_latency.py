@@ -143,12 +143,86 @@ def real_run(csv: Csv, results: dict) -> None:
     results["real"] = row
 
 
+def multihost_run(csv: Csv, results: dict, procs: int) -> None:
+    """SIGKILL-a-worker recovery latency through the multi-process
+    backend (runtime/multihost.py): wall-clocks heartbeat detection,
+    the two-phase agreed replan, the cross-process state pulls, and the
+    first post-recovery step, asserting zero XLA recompiles on every
+    survivor."""
+    from repro.data import GlobalBatchDispenser, SyntheticLM
+    from repro.launch.train import _multiproc_hosting
+    from repro.runtime.multihost import MultiHostExecutor, make_job_spec
+
+    nodes = [f"n{i}" for i in range(5)]
+    spec = make_job_spec(arch="gpt3_medium", layers=4, seq_len=32,
+                         microbatch=2, global_batch=16, f=1, n0=2,
+                         nodes=nodes, nodes_per_pod=4,
+                         hosting=_multiproc_hosting(nodes, procs),
+                         procs=procs, seed=0)
+    import repro.configs as _configs
+    vocab = _configs.reduced(_configs.get_arch("gpt3_medium"),
+                             layers=4).vocab_size
+    disp = GlobalBatchDispenser(SyntheticLM(vocab, 32, seed=1))
+
+    def microbatches(batch):
+        return [{k: v[i * 2:(i + 1) * 2] for k, v in batch.items()
+                 if not k.startswith("_")}
+                for i in range(batch["tokens"].shape[0] // 2)]
+
+    with MultiHostExecutor(spec) as mh:
+        t0 = time.perf_counter()
+        mh.warm_templates()
+        warm_s = time.perf_counter() - t0
+
+        def drive():
+            batches = disp.next_step(mh.engine.batch.minibatch_sizes())
+            return mh.step([microbatches(b) for b in batches])
+
+        drive()
+        mh.mark_compiles()          # steady state: glue ops traced
+        victim = max(mh.procs)
+        t0 = time.perf_counter()
+        mh.kill_worker(victim)
+        dead, _ = mh.detected_dead(timeout=30.0)
+        detect_s = time.perf_counter() - t0
+        assert dead, "heartbeat channel must surface the SIGKILL"
+        t0 = time.perf_counter()
+        info = mh.recover(dead)
+        recover_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        drive()
+        first_step_s = time.perf_counter() - t0
+        compiles = mh.compile_counts()
+        assert all(v == 0 for v in compiles.values()), \
+            f"warm cache must make the compile leg 0, got {compiles}"
+        bd = info["breakdown"]
+        row = {"procs": procs, "warm_s": warm_s, "detect_s": detect_s,
+               "recover_s": recover_s, "first_step_s": first_step_s,
+               "replan_s": bd["replan"], "transfer_s": bd["transfer"],
+               "compile_s": bd["compile"], "barrier_s": bd["barrier"],
+               "commit_s": bd["commit"],
+               "fetched_bytes": info["fetched_bytes"],
+               "fetches": info["fetches"], "epoch": info["epoch"],
+               "survivor_compiles": sum(compiles.values())}
+        csv.add(f"recovery,multihost,procs={procs},sigkill1",
+                (detect_s + recover_s + first_step_s) * 1e6,
+                f"detect={detect_s:.2f}s|replan={bd['replan']:.3f}s"
+                f"|transfer={bd['transfer']:.3f}s|commit={bd['commit']:.3f}s"
+                f"|barrier={bd['barrier']:.3f}s|first_step={first_step_s:.3f}s"
+                f"|fetched={info['fetched_bytes'] / 1e6:.1f}MB|compiles=0")
+        results["multihost"] = row
+
+
 def main(csv=None, argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--sizes", type=int, nargs="*", default=[16, 32, 64])
     ap.add_argument("--layers", type=int, default=26)
     ap.add_argument("--real", action="store_true",
                     help="also run the small real-arrays measurement")
+    ap.add_argument("--procs", type=int, default=0,
+                    help="also run the SIGKILL-a-worker measurement "
+                         "through the multi-process backend with N "
+                         "worker processes")
     ap.add_argument("--json", default="")
     args = ap.parse_args(argv)
 
@@ -165,6 +239,8 @@ def main(csv=None, argv=None):
                     results=results)
     if args.real:
         real_run(csv, results)
+    if args.procs:
+        multihost_run(csv, results, args.procs)
 
     # headline checks the acceptance criteria name
     for n in args.sizes:

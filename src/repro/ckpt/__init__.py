@@ -1,5 +1,5 @@
 from repro.ckpt.checkpoint import (CheckpointError, CheckpointManager,
-                                   TrainState, record_hash)
+                                   TrainState, elect_writer, record_hash)
 
 __all__ = ["CheckpointError", "CheckpointManager", "TrainState",
-           "record_hash"]
+           "elect_writer", "record_hash"]

@@ -103,16 +103,37 @@ class CheckpointError(RuntimeError):
     """A background save failed; surfaced on wait()/the next save."""
 
 
+def elect_writer(live_ids) -> str:
+    """Deterministic manifest-writer election for multi-process saves:
+    every process computes the same winner from the same live set (the
+    coordinator's heartbeat view), so exactly one process commits the
+    per-step MANIFEST while all of them write content-addressed shards.
+    Lowest id wins — stable across calls, no communication needed."""
+    ids = sorted(live_ids)
+    if not ids:
+        raise ValueError("no live processes to elect a writer from")
+    return ids[0]
+
+
 class CheckpointManager:
     def __init__(self, directory: str, num_layers: int,
-                 async_mode: bool = True, keep: int = 2):
+                 async_mode: bool = True, keep: int = 2,
+                 process_id: str = "proc0", manifest_writer: bool = True):
         self.dir = directory
         self.num_layers = num_layers
         self.async_mode = async_mode
         self.keep = keep
+        # multi-process safety (DESIGN.md §15): every process may write
+        # shards (content-addressed, so concurrent identical writes are
+        # idempotent) but only the ELECTED writer commits the per-step
+        # MANIFEST and runs gc — a non-writer's gc could otherwise
+        # delete shards of a step whose manifest hasn't landed yet.
+        self.process_id = process_id
+        self.manifest_writer = manifest_writer
         self.stats: Dict[str, int] = {"saves": 0, "saved_shards": 0,
                                       "skipped_shards": 0, "gc_shards": 0,
-                                      "gc_steps": 0}
+                                      "gc_steps": 0, "manifest_races": 0,
+                                      "manifests_skipped": 0}
         self._lock = threading.Lock()
         self._pinned: Dict[str, int] = {}      # hash -> pending refcount
         # bounded: each payload is a full host snapshot, so backpressure
@@ -249,7 +270,13 @@ class CheckpointManager:
                 if os.path.exists(tmp):
                     os.remove(tmp)
             self.stats["saved_shards"] += 1
-        # 2. manifest, LAST, via atomic rename of the step dir
+        # 2. manifest, LAST, via atomic rename of the step dir — writer
+        # only; shard-only processes stop here (their bytes are already
+        # durable and content-addressed, the writer's manifest will
+        # reference them)
+        if not self.manifest_writer:
+            self.stats["manifests_skipped"] += 1
+            return
         step = payload["step"]
         tmp = tempfile.mkdtemp(dir=self.dir, prefix=".tmp_")
         try:
@@ -259,7 +286,18 @@ class CheckpointManager:
             with self._lock:
                 if os.path.exists(final):
                     shutil.rmtree(final)
-                os.rename(tmp, final)
+                try:
+                    os.rename(tmp, final)
+                except OSError:
+                    # ANOTHER PROCESS committed this step between our
+                    # exists-check and rename (two elected writers can
+                    # only race transiently, during a membership change).
+                    # Content-addressing makes the outcome identical
+                    # either way: verify theirs and count the race.
+                    if not os.path.exists(
+                            os.path.join(final, "MANIFEST.json")):
+                        raise
+                    self.stats["manifest_races"] += 1
         finally:
             if os.path.exists(tmp):
                 shutil.rmtree(tmp, ignore_errors=True)

@@ -4,10 +4,11 @@ from repro.core.adapt import (AdaptationError, AdaptCostModel, AdaptCostRow,
                               AdaptPlan)
 from repro.core.batch import BatchPlan, distribute_batch, distribute_microbatches
 from repro.core.cost_model import LayerCost, ModelProfile, build_profile
-from repro.core.engine import EngineConfig, OobleckEngine
+from repro.core.engine import ConfigurationEngine, EngineConfig, OobleckEngine
 from repro.core.instantiator import (InstantiationPlan, choose_plan,
                                      enumerate_feasible_sets)
-from repro.core.monitor import ClusterEvent, NodeChangeMonitor
+from repro.core.monitor import (ClusterEvent, HeartbeatConfig,
+                                HeartbeatTracker, NodeChangeMonitor)
 from repro.core.planner import PipelinePlanner, estimate_iteration_time
 from repro.core.reconfigure import (CopyTask, InsufficientReplicasError,
                                     PipelineInstance, ReconfigResult,
@@ -21,9 +22,10 @@ __all__ = [
     "AdaptationError", "AdaptCostModel", "AdaptCostRow", "AdaptPlan",
     "BatchPlan", "distribute_batch", "distribute_microbatches",
     "LayerCost", "ModelProfile", "build_profile",
-    "EngineConfig", "OobleckEngine",
+    "ConfigurationEngine", "EngineConfig", "OobleckEngine",
     "InstantiationPlan", "choose_plan", "enumerate_feasible_sets",
-    "ClusterEvent", "NodeChangeMonitor",
+    "ClusterEvent", "HeartbeatConfig", "HeartbeatTracker",
+    "NodeChangeMonitor",
     "PipelinePlanner", "estimate_iteration_time",
     "CopyTask", "InsufficientReplicasError", "PipelineInstance",
     "ReconfigResult", "Reconfigurator",

@@ -1,4 +1,15 @@
-"""Oobleck execution engine: lifecycle orchestration (paper §3.3–3.4).
+"""Oobleck ConfigurationEngine: cluster-wide planning (paper §3.3–3.4).
+
+The paper splits responsibilities between one cluster-wide
+*ConfigurationEngine* (planning, policy selection, reconfiguration-epoch
+assignment) and per-node *ExecutionEngines* (device state, compiled
+programs).  This module is the configuration side: it owns NO device
+state — instances, batch plans, copy plans and cost models only — so a
+coordinator process can run it without touching an accelerator, while
+every worker process keeps a deterministic replica of it for agreement
+(runtime/multihost.py; fingerprints prove the replicas planned the same
+transition).  ``OobleckEngine`` remains as an alias for the historical
+single-process name.
 
 Ties the planning artifacts together:
 
@@ -83,7 +94,7 @@ class EngineMetrics:
     spare_promotions: int = 0
 
 
-class OobleckEngine:
+class ConfigurationEngine:
     def __init__(self, profile: cm.ModelProfile, nodes: Sequence[str],
                  config: EngineConfig,
                  monitor: Optional[NodeChangeMonitor] = None,
@@ -110,6 +121,12 @@ class OobleckEngine:
         # failure loses no work (truthy iff a drain is pending)
         self.draining: Set[str] = set()
         self.stopped = False
+        # reconfiguration epoch: bumped on every APPLIED reconfiguration
+        # (failure, join, adaptation, spare promotion).  In multi-process
+        # deployments survivors agree on the epoch at which they switch
+        # templates (two-phase, runtime/coordination.py); single-process
+        # runs just observe it as a counter.
+        self.epoch = 0
 
         t0 = _time.perf_counter()
         n0 = (config.n0_override if config.n0_override is not None
@@ -156,6 +173,31 @@ class OobleckEngine:
     @property
     def nodes(self) -> List[str]:
         return [n for inst in self.instances for n in inst.nodes]
+
+    def plan_fingerprint(self, result: Optional[ReconfigResult] = None) -> str:
+        """Digest of a plan (instances + batch + copy plan) — what the
+        two-phase reconfiguration protocol compares across the
+        coordinator's engine and every worker's deterministic replica to
+        prove they computed the SAME transition before any state moves.
+        With ``result=None`` it fingerprints the CURRENT configuration."""
+        import hashlib
+        import json
+        instances = self.instances if result is None else result.instances
+        batch = self.batch if result is None else result.batch
+        copy_plan = [] if result is None else result.copy_plan
+        doc = {
+            "instances": [
+                [inst.instance_id, list(inst.nodes),
+                 [[st.layer_start, st.layer_end]
+                  for st in inst.template.stages]]
+                for inst in instances],
+            "num_microbatches": list(batch.num_microbatches),
+            "microbatch_size": batch.microbatch_size,
+            "copies": [[t.layer, t.src_node, t.dst_node, t.nbytes]
+                       for t in copy_plan],
+        }
+        return hashlib.sha256(
+            json.dumps(doc, sort_keys=True).encode()).hexdigest()[:16]
 
     def sync_plan(self) -> List[SyncBucket]:
         layer_bytes = [l.param_bytes for l in self.profile.layers]
@@ -307,6 +349,7 @@ class OobleckEngine:
         self.instances = list(plan.instances)
         self.batch = plan.batch
         self.metrics.reconfigurations += 1
+        self.epoch += 1
         self.metrics.adaptations += 1
         if not drained:
             self.metrics.lost_iterations += 1
@@ -371,6 +414,7 @@ class OobleckEngine:
         self.instances = result.instances
         self.batch = result.batch
         self.metrics.reconfigurations += 1
+        self.epoch += 1
         self.metrics.spare_promotions += 1
         self.metrics.total_copy_bytes += result.copy_bytes()
         if not drained:
@@ -501,6 +545,7 @@ class OobleckEngine:
         self.instances = result.instances
         self.batch = result.batch
         self.metrics.reconfigurations += 1
+        self.epoch += 1
         self.metrics.total_copy_bytes += result.copy_bytes()
         if not drained:
             self.metrics.lost_iterations += 1  # in-flight iteration lost
@@ -536,8 +581,14 @@ class OobleckEngine:
         self.instances = result.instances
         self.batch = result.batch
         self.metrics.reconfigurations += 1
+        self.epoch += 1
         self.metrics.total_copy_bytes += result.copy_bytes()
         self.last_reconfig = result
         self.spare_nodes = list(result.spare_nodes)
         self.draining -= set(new_nodes)    # a returning node isn't leaving
         return result
+
+
+# Historical single-process name: the class that was both halves of the
+# engine before the ExecutionEngine split (runtime/multihost.py).
+OobleckEngine = ConfigurationEngine

@@ -339,7 +339,12 @@ class Reconfigurator:
         load: Dict[str, int] = {}
         for inst in instances:
             for layer, owners in inst.all_layer_owners().items():
-                alive_srcs = [n for n in old_owners.get(layer, ()) if n not in dead]
+                # sorted: old_owners holds SETS, whose iteration order is
+                # per-process (hash randomization).  The source pick below
+                # breaks load ties by position, and the pick is part of the
+                # plan fingerprint every process must agree on.
+                alive_srcs = sorted(
+                    n for n in old_owners.get(layer, ()) if n not in dead)
                 for node in owners:
                     if node in old_owners.get(layer, ()):
                         continue  # already holds this layer

@@ -17,8 +17,9 @@ ssd.py, gridcheck.py) is what made the probe meaningful.
 
 Because lowering is resolved at trace time, it is part of program
 identity: any cache of traced programs must carry
-``backend_signature()`` — now (backend, per-kind lowering plan) — in
-its key (the runtime's ProgramCache does; see runtime/executor.py).
+``backend_signature()`` — now (backend, process topology, per-kind
+lowering plan) — in its key (the runtime's ProgramCache does; see
+runtime/executor.py).
 Otherwise a program traced under the CPU default and reused on an
 accelerator mesh would silently run the Python interpreter at device
 speed's expense.
@@ -186,15 +187,35 @@ def interpret_mode(backend: Optional[str] = None) -> bool:
     return any(not lowered for _, lowered in lowering_plan(backend))
 
 
-def backend_signature() -> Tuple[str, Tuple[Tuple[str, bool], ...]]:
-    """(backend, per-kind lowering plan) — REQUIRED component of any
-    cache key over traced programs that may contain these kernels (the
-    bug this fixes: lowering is resolved at trace time, so a program
-    cached on the CPU default would run interpreted when reused on an
-    accelerator mesh — and, since the probe is per kernel, two backends
-    may compile different SUBSETS of the kinds)."""
+def process_topology() -> Tuple[int, int, Tuple[int, ...]]:
+    """(process_count, process_index, local device ids) — the process
+    placement a program was traced under.  Worker launchers
+    (runtime/multihost.py) pin it via ``REPRO_PROC_COUNT`` /
+    ``REPRO_PROC_INDEX`` before jax initializes; otherwise it reflects
+    ``jax.process_count()`` (1 on a single-controller run)."""
+    import os
+    count = os.environ.get("REPRO_PROC_COUNT")
+    index = os.environ.get("REPRO_PROC_INDEX")
+    if count is not None:
+        return (int(count), int(index or 0),
+                tuple(d.id for d in jax.local_devices()))
+    return (jax.process_count(), jax.process_index(),
+            tuple(d.id for d in jax.local_devices()))
+
+
+def backend_signature() -> Tuple:
+    """(backend, process topology, per-kind lowering plan) — REQUIRED
+    component of any cache key over traced programs that may contain
+    these kernels (the bug this fixes: lowering is resolved at trace
+    time, so a program cached on the CPU default would run interpreted
+    when reused on an accelerator mesh — and, since the probe is per
+    kernel, two backends may compile different SUBSETS of the kinds).
+    The topology component keeps single-process and multi-process
+    compilations of the SAME template from ever colliding in a shared
+    cache: a program traced for one process's local device set is not
+    interchangeable with one traced for another (ISSUE 10 satellite)."""
     backend = resolve_backend()
-    return (backend, lowering_plan(backend))
+    return (backend, process_topology(), lowering_plan(backend))
 
 
 # ----------------------------------------------------------------------

@@ -45,6 +45,74 @@ def microbatches(batch, mb_size):
              if not k.startswith("_")} for i in range(n)]
 
 
+def _multiproc_hosting(nodes, procs):
+    """node -> worker rank.  The LAST rank hosts exactly one node, so
+    killing it (--kill-at) drops one node — the smallest failure a
+    process death can model — and leaves the survivors above the
+    (f+1)*n0 floor in the default 5-node/f=1 setup."""
+    ranks = list(range(procs))
+    host = {nodes[-1]: ranks[-1]}
+    rest = nodes[:-1]
+    per = -(-len(rest) // max(1, procs - 1)) if procs > 1 else len(rest)
+    for i, n in enumerate(rest):
+        host[n] = min(i // per, procs - 2) if procs > 1 else 0
+    return host
+
+
+def run_multiproc(args) -> dict:
+    """--procs N: the same training loop through the multi-process
+    backend (runtime/multihost.py) — coordinator here, N spawned worker
+    processes execute; --kill-at SIGKILLs a worker and recovery runs
+    from heartbeat detection, not an injected event."""
+    from repro.runtime.multihost import MultiHostExecutor, make_job_spec
+
+    nodes = [f"node{i}" for i in range(args.nodes)]
+    spec = make_job_spec(
+        arch=args.arch, layers=args.layers, seq_len=args.seq_len,
+        microbatch=args.microbatch, global_batch=args.global_batch,
+        f=args.f, n0=args.n0, nodes=nodes, nodes_per_pod=args.pods,
+        hosting=_multiproc_hosting(nodes, args.procs), procs=args.procs,
+        seed=args.seed,
+        opt={"lr": 3e-3, "warmup_steps": 0, "weight_decay": 0.0})
+    source = ByteCorpus(_TEXT * 50, seq_len=args.seq_len)
+    disp = GlobalBatchDispenser(source)
+    losses = []
+    with MultiHostExecutor(spec) as mh:
+        engine = mh.engine
+        print(f"[plan] procs={args.procs} hosting={mh.hosting} "
+              f"pipelines={[i.template.num_nodes for i in engine.instances]}")
+        t0 = time.perf_counter()
+        mh.warm_templates()
+        print(f"[warm] all workers warm in {time.perf_counter() - t0:.1f}s")
+        for step in range(args.steps):
+            if step == args.kill_at:
+                victim = max(mh.procs)
+                mh.kill_worker(victim)
+                dead, ranks = mh.detected_dead(timeout=30.0)
+                t0 = time.perf_counter()
+                info = mh.recover(dead)
+                bd = info["breakdown"]
+                print(f"[fail] SIGKILL rank {victim} -> heartbeat detected "
+                      f"{sorted(dead)} dead; recovered in "
+                      f"{time.perf_counter() - t0:.2f}s (epoch "
+                      f"{info['epoch']}, {info['fetched_bytes'] / 1e6:.1f}MB "
+                      f"pulled cross-process in {info['fetches']} fetches, "
+                      f"replan {bd['replan'] * 1e3:.0f}ms, commit "
+                      f"{bd['commit'] * 1e3:.0f}ms)")
+            batches = disp.next_step(engine.batch.minibatch_sizes())
+            out = mh.step(
+                [microbatches(b, args.microbatch) for b in batches])
+            losses.append(float(out["loss"]))
+            print(f"[step {step}] loss={losses[-1]:.4f} "
+                  f"pipelines={out['num_pipelines']} "
+                  f"divergence={mh.replica_divergence()}")
+        compiles = mh.compile_counts()
+        print(f"[done] loss {losses[0]:.4f} -> {losses[-1]:.4f}; "
+              f"worker compiles since warm: {compiles}")
+    assert losses[-1] < losses[0], "training must reduce the loss"
+    return {"losses": losses}
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gpt3-medium")
@@ -92,7 +160,15 @@ def main(argv=None) -> dict:
                     help="SSD path for Mamba2/hybrid stage layers")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--procs", type=int, default=0,
+                    help="run through the multi-process backend with N "
+                         "worker processes (runtime/multihost.py); "
+                         "--kill-at then SIGKILLs a worker and recovery "
+                         "runs from heartbeat detection")
     args = ap.parse_args(argv)
+
+    if args.procs > 0:
+        return run_multiproc(args)
 
     if args.eager and args.codec != "none":
         # the eager per-layer oracle has no wire codec; keep the engine's

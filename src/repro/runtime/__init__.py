@@ -1,8 +1,16 @@
-from repro.runtime.executor import (Executor, ExecutorUnsupported,
-                                    ProgramCache, template_signature,
-                                    track_compiles, track_host_transfers,
-                                    tree_spec)
+from repro.runtime.coordination import (CoordinatorServer, DataServer,
+                                        EpochMismatch, WorkerChannel,
+                                        WorkerLost, data_call, pack_batches,
+                                        pack_tree, recv_msg, send_msg,
+                                        unpack_batches, unpack_tree)
+from repro.runtime.executor import (CompileCounter, Executor,
+                                    ExecutorUnsupported, ProgramCache,
+                                    template_signature, track_compiles,
+                                    track_host_transfers, tree_spec)
 from repro.runtime.pipeline import HeteroTrainer, split_into_layers
+from repro.runtime.multihost import (MultiHostExecutor, ShardTrainer,
+                                     build_setup, layer_state_hash,
+                                     make_job_spec)
 from repro.runtime.schedule import (ScheduleError, adapt_reroute,
                                     adapted_flat_schedule, adapted_per_stage,
                                     flat_schedule, one_f_one_b,
@@ -17,9 +25,16 @@ from repro.runtime.sync_exec import (BucketedSync, BucketExec,
 from repro.runtime.transfer import (Topology, TransferPlan, TransferPlanError,
                                     TransferStream, schedule_transfers)
 
-__all__ = ["Executor", "ExecutorUnsupported", "ProgramCache",
-           "template_signature", "track_compiles", "track_host_transfers",
-           "tree_spec", "HeteroTrainer", "split_into_layers",
+__all__ = ["CoordinatorServer", "DataServer", "EpochMismatch",
+           "WorkerChannel", "WorkerLost", "data_call", "pack_batches",
+           "pack_tree", "recv_msg", "send_msg", "unpack_batches",
+           "unpack_tree",
+           "CompileCounter", "Executor", "ExecutorUnsupported",
+           "ProgramCache", "template_signature", "track_compiles",
+           "track_host_transfers", "tree_spec",
+           "HeteroTrainer", "split_into_layers",
+           "MultiHostExecutor", "ShardTrainer", "build_setup",
+           "layer_state_hash", "make_job_spec",
            "ScheduleError", "adapt_reroute", "adapted_flat_schedule",
            "adapted_per_stage", "flat_schedule", "one_f_one_b",
            "simulate_makespan",

@@ -88,14 +88,25 @@ class ProgramCache:
     .compile()``) and counts a compile; a hit returns the stored
     executable untouched.  Reconfiguration correctness tests assert
     ``stats.compiles`` stays flat across a failure->recover->step cycle.
+
+    ``namespace`` scopes every key: multi-process workers pass their
+    process topology (``kernels.ops.process_topology()``) so entries
+    compiled under one process layout can never be served to another —
+    program kinds whose keys don't already embed ``backend_signature()``
+    (the bucket sync/update family) would otherwise collide if caches
+    were ever shared across processes (ISSUE 10 satellite).
     """
 
-    def __init__(self) -> None:
+    def __init__(self, namespace: Hashable = None) -> None:
         self._programs: Dict[Hashable, Callable] = {}
+        self.namespace = namespace
         self.stats = CacheStats()
 
+    def _full(self, key: Hashable) -> Hashable:
+        return key if self.namespace is None else (self.namespace, key)
+
     def __contains__(self, key: Hashable) -> bool:
-        return key in self._programs
+        return self._full(key) in self._programs
 
     def __len__(self) -> int:
         return len(self._programs)
@@ -105,6 +116,7 @@ class ProgramCache:
 
     def get_or_build(self, key: Hashable, builder: Callable[[], Callable]
                      ) -> Callable:
+        key = self._full(key)
         prog = self._programs.get(key)
         if prog is not None:
             self.stats.hits += 1
@@ -153,6 +165,30 @@ def track_compiles() -> Iterator[CompileLog]:
             _mon._unregister_event_duration_listener_by_callback(listener)
         except Exception:
             pass  # listener stays registered but inert (_active False)
+
+
+class CompileCounter:
+    """Persistent XLA backend-compile counter (the long-lived sibling of
+    ``track_compiles``): registered once, never unregistered, so a
+    worker process can report compiles-since-warm over RPC at any point
+    of its life — the survivors' zero-recompile assertion in the
+    multi-process acceptance test reads this."""
+
+    def __init__(self) -> None:
+        self.count = 0
+        self._mark = 0
+
+        def listener(name: str, secs: float, **kw: Any) -> None:
+            if name == _BACKEND_COMPILE_EVENT:
+                self.count += 1
+
+        jax.monitoring.register_event_duration_secs_listener(listener)
+
+    def mark(self) -> None:
+        self._mark = self.count
+
+    def since_mark(self) -> int:
+        return self.count - self._mark
 
 
 # ----------------------------------------------------------------------

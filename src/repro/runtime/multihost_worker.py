@@ -1,0 +1,7 @@
+"""Worker-process entry point, kept separate from runtime/multihost.py
+so ``python -m`` launches don't re-execute a module the ``repro.runtime``
+package already imported (runpy's double-import warning)."""
+from repro.runtime.multihost import worker_cli
+
+if __name__ == "__main__":
+    worker_cli()

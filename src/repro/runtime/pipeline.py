@@ -206,10 +206,17 @@ class HeteroTrainer(Executor):
                                    codec=codec)
         self._bucket_plan_cache = None   # rebuilt whenever bind() runs
         self.runs: List[PipelineRun] = [
-            self._bind_run(inst, layers) for inst in engine.instances]
+            self._bind_run(inst, layers) for inst in self._bound_instances()]
         if hasattr(engine, "attach_executor"):
             engine.attach_executor(self)
         self.bind()
+
+    def _bound_instances(self) -> List[PipelineInstance]:
+        """Which pipeline instances THIS process binds full state for.
+        The single-controller trainer binds all of them; the multi-host
+        shard trainer (runtime/multihost.py) overrides this to bind only
+        the replicas its process leads."""
+        return list(self.engine.instances)
 
     # ------------------------------------------------------------------
     def _bind_run(self, inst: PipelineInstance, layers: Optional[List[Dict]],
@@ -352,8 +359,10 @@ class HeteroTrainer(Executor):
         self._bucket_plan_cache = None
         if self.mode != "compiled":
             return
-        for run, M in zip(self.runs, self.engine.batch.num_microbatches):
-            tok, lab = self._batch_avals(M)
+        mb_of = {id(inst): M for inst, M in zip(
+            self.engine.instances, self.engine.batch.num_microbatches)}
+        for run in self.runs:
+            tok, lab = self._batch_avals(mb_of[id(run.instance)])
             self._grads_program(run.signature, tok, lab)
         if self.sync_mode == "bucketed":
             plan = self._bucket_plan()
@@ -639,7 +648,7 @@ class HeteroTrainer(Executor):
             return fallback[layer]
 
         self.runs = [self._bind_run(inst, layers=None, state_fn=state_for)
-                     for inst in self.engine.instances]
+                     for inst in self._bound_instances()]
         self.bind()        # swap programs by lookup (zero compiles if warm)
         stats = plan.stats()      # prices the makespan once
         return {"copied_bytes": result.copy_bytes(),

@@ -333,28 +333,27 @@ class BucketedSync:
     # ------------------------------------------------------------------
     # Execution
     # ------------------------------------------------------------------
-    def reduce(self, plan: Sequence[BucketExec],
-               all_grads: Sequence[Dict[int, Any]],
-               weights: Sequence[float]) -> SyncReduceResult:
-        """Weighted cross-replica reduction of every bucket, issued
-        deepest-first (the plan's order).  Pure with respect to trainer
-        state: residual updates are STAGED, committed by the caller only
-        after the sync-phase fault seam passes — an aborted iteration
-        leaves residuals exactly as they were (§3.3 lost-iteration
-        semantics)."""
-        R = len(all_grads)
+    def contributions(self, plan: Sequence[BucketExec],
+                      grads_by_replica: Dict[int, Dict[int, Any]],
+                      weights: Sequence[float]
+                      ) -> Tuple[Dict[int, List[jax.Array]],
+                                 Dict[Hashable, jax.Array]]:
+        """Per-replica weighted bucket contributions: pack each bucket's
+        layer grads into one flat fp32 buffer, scale by the replica's
+        batch weight, and (if a codec is configured) run the error-
+        feedback roundtrip.  ``grads_by_replica`` maps GLOBAL replica
+        index -> that replica's per-layer grads — a multi-process worker
+        passes only the replicas it executes; single-process passes all.
+        Returns ({replica: [flat per bucket]}, staged residuals).  These
+        buffers are exactly what crosses the wire between processes."""
         wsum = float(sum(weights))
-        w_dev = [jnp.asarray(w / wsum, jnp.float32) for w in weights]
-        flats: List[jax.Array] = []
-        sumsqs: List[jax.Array] = []
+        w_dev = {r: jnp.asarray(weights[r] / wsum, jnp.float32)
+                 for r in grads_by_replica}
+        out: Dict[int, List[jax.Array]] = {r: [] for r in grads_by_replica}
         staged: Dict[Hashable, jax.Array] = {}
         for b in plan:
-            groups = (b.pod_groups if b.pod_groups != ((),)
-                      else (tuple(range(R)),))
             pack = self._pack_prog(b)
-            contribs: List[Optional[jax.Array]] = [None] * R
-            for r in range(R):
-                g = all_grads[r]
+            for r, g in grads_by_replica.items():
                 missing = [l for l in b.lids if l not in g]
                 assert not missing, \
                     f"replica {r} lacks grads for layers {missing}"
@@ -367,12 +366,30 @@ class BucketedSync:
                         res = self._zeros(b.n)
                     c, new_res = self._ef_prog(b.n)(c, res)
                     staged[res_key] = new_res
-                contribs[r] = c
-            # hierarchical two-level reduction: partial sums within each
-            # pod (ICI legs), then one exchange across pods (DCN leg);
-            # single pod degenerates to the eager left-to-right chain,
-            # which is what makes codec="none" bitwise-equal to the
-            # per-layer oracle.
+                out[r].append(c)
+        return out, staged
+
+    def combine(self, plan: Sequence[BucketExec],
+                contribs_by_replica: Dict[int, Sequence[Any]]
+                ) -> Tuple[List[jax.Array], List[jax.Array]]:
+        """Reduce the full contribution set: per bucket, partial sums
+        within each pod group (ICI legs) then one exchange across pods
+        (DCN leg), plus the per-bucket sumsq.  Deterministic left-to-
+        right chains — every caller holding the same contributions
+        computes the SAME bits, which is what lets every process in a
+        multi-host run execute this redundantly and stay bit-identical
+        (and what makes codec="none" bitwise-equal to the per-layer
+        oracle on a single pod)."""
+        R = len(contribs_by_replica)
+        assert sorted(contribs_by_replica) == list(range(R)), \
+            f"combine needs contributions from ALL replicas, got " \
+            f"{sorted(contribs_by_replica)}"
+        flats: List[jax.Array] = []
+        sumsqs: List[jax.Array] = []
+        for i, b in enumerate(plan):
+            groups = (b.pod_groups if b.pod_groups != ((),)
+                      else (tuple(range(R)),))
+            contribs = [contribs_by_replica[r][i] for r in range(R)]
             partials: List[jax.Array] = []
             for grp in groups:
                 acc = contribs[grp[0]]
@@ -384,6 +401,20 @@ class BucketedSync:
                 total = self._add_prog(b.n)(total, p)
             flats.append(total)
             sumsqs.append(self._sumsq_prog(b.n)(total))
+        return flats, sumsqs
+
+    def reduce(self, plan: Sequence[BucketExec],
+               all_grads: Sequence[Dict[int, Any]],
+               weights: Sequence[float]) -> SyncReduceResult:
+        """Weighted cross-replica reduction of every bucket, issued
+        deepest-first (the plan's order): contributions + combine in one
+        process.  Pure with respect to trainer state: residual updates
+        are STAGED, committed by the caller only after the sync-phase
+        fault seam passes — an aborted iteration leaves residuals
+        exactly as they were (§3.3 lost-iteration semantics)."""
+        contribs, staged = self.contributions(
+            plan, {r: g for r, g in enumerate(all_grads)}, weights)
+        flats, sumsqs = self.combine(plan, contribs)
         return SyncReduceResult(flats=flats, sumsqs=sumsqs,
                                 staged_residuals=staged)
 

@@ -146,6 +146,16 @@ class TransferPlan:
                 return s.src
         return None
 
+    def incoming(self, dst: str) -> List[Tuple[int, str]]:
+        """Every (layer, src) this destination receives, in stream then
+        task order — what a multi-host worker must actually FETCH over
+        the wire for the node it hosts."""
+        out: List[Tuple[int, str]] = []
+        for s in self.streams:
+            if s.dst == dst:
+                out.extend((t.layer, s.src) for t in s.tasks)
+        return out
+
     # ------------------------------------------------------------------
     # Timing: progressive filling over shared links
     # ------------------------------------------------------------------

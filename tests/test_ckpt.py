@@ -211,3 +211,82 @@ def test_restore_maps_onto_a_different_template_layout(tmp_path):
     for a, b in zip(jax.tree.leaves(rebound.full_params()),
                     jax.tree.leaves(snap.params)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------------------------------------------------
+# Multi-process writers (runtime/multihost.py checkpointing)
+# ----------------------------------------------------------------------
+def test_nonwriter_saves_shards_but_skips_manifest_and_gc(tmp_path, state):
+    """Two processes checkpoint the same trajectory: every process
+    writes content-addressed shards, only the elected writer commits
+    the per-step MANIFEST and runs gc.  A non-writer's gc could delete
+    shards of a step whose manifest hasn't landed yet — it must not run
+    one at all."""
+    arch, params, opt = state
+    w = CheckpointManager(str(tmp_path), num_layers=arch.num_layers,
+                          async_mode=False, keep=1, process_id="proc0",
+                          manifest_writer=True)
+    nw = CheckpointManager(str(tmp_path), num_layers=arch.num_layers,
+                           async_mode=False, keep=1, process_id="proc1",
+                           manifest_writer=False)
+    st1 = TrainState(1, params, opt, {}, 0)
+    # non-writer lands first: shards durable, step NOT yet visible
+    nw.save(st1)
+    assert nw.stats["manifests_skipped"] == 1
+    assert nw.stats["saved_shards"] == arch.num_layers + 1
+    assert nw.list_steps() == []
+    # writer commits the same step: every shard dedupes, manifest lands
+    w.save(st1)
+    assert w.stats["skipped_shards"] == arch.num_layers + 1
+    assert w.stats["saved_shards"] == 0
+    assert w.list_steps() == [1] and nw.list_steps() == [1]
+    assert w.verify(1) and nw.verify(1)
+    # non-writer races ahead to step 2 with keep=1: NO gc may run —
+    # step 1 (the only committed step) must stay fully restorable
+    nw.save(TrainState(2, _bump_layer(params, 0), opt, {}, 0))
+    assert nw.stats["gc_steps"] == 0 and nw.stats["gc_shards"] == 0
+    assert w.verify(1)
+    # writer commits step 2: its gc now retires step 1
+    w.save(TrainState(2, _bump_layer(params, 0), opt, {}, 0))
+    assert w.list_steps() == [2] and w.verify(2)
+
+
+def test_two_concurrent_writers_same_step_tolerate_manifest_race(
+        tmp_path, state, monkeypatch):
+    """Transiently (during a membership change) TWO processes can both
+    believe they are the elected writer.  Content-addressing makes the
+    outcome identical either way: the loser of the manifest rename
+    counts a race and moves on, and the step verifies."""
+    arch, params, opt = state
+    a = CheckpointManager(str(tmp_path), num_layers=arch.num_layers,
+                          async_mode=False, process_id="proc0")
+    b = CheckpointManager(str(tmp_path), num_layers=arch.num_layers,
+                          async_mode=False, process_id="proc1")
+    st = TrainState(5, params, opt, {}, 0)
+    real_rename = os.rename
+    fired = {"done": False}
+
+    def racing(srcp, dstp):
+        # A commits step 5 inside B's window between the exists-check
+        # and the rename — the exact interleaving two processes hit
+        if not fired["done"] and dstp == b._step_dir(5):
+            fired["done"] = True
+            a.save(st)
+        return real_rename(srcp, dstp)
+    monkeypatch.setattr(ckpt_mod.os, "rename", racing)
+    b.save(st)
+    assert b.stats["manifest_races"] == 1
+    assert a.stats["manifest_races"] == 0
+    assert a.list_steps() == [5] and b.list_steps() == [5]
+    assert a.verify(5) and b.verify(5)
+    restored = b.restore(st.params, st.opt_state)
+    for x, y in zip(jax.tree.leaves(restored.params),
+                    jax.tree.leaves(st.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_elect_writer_matches_coordinator_view():
+    from repro.ckpt import elect_writer
+    assert elect_writer({"proc3", "proc1", "proc2"}) == "proc1"
+    with pytest.raises(ValueError):
+        elect_writer(set())

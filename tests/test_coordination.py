@@ -1,0 +1,264 @@
+"""Coordination channel + heartbeat failure detection (DESIGN.md §15).
+
+Unit-level contract of the multi-process control plane, no subprocesses:
+
+  1. WIRE — the framed header+blobs format round-trips bit-exactly,
+     including the pytree and microbatch packers recovery and the step
+     protocol ride on.
+  2. HEARTBEAT — the alive -> suspect -> dead state machine under an
+     injected clock: SUSPECT only past ``timeout``, DEAD only past
+     ``timeout * (1 + backoff)``, each death reported exactly ONCE, and
+     DEAD is sticky (a fenced member's beats are discarded — a zombie
+     can't resurrect into a reconfigured plan).
+  3. RPC — CoordinatorServer <-> WorkerChannel over real localhost
+     sockets (threads, not processes): request/response routing,
+     concurrent broadcast, per-rank payloads, remote-exception
+     propagation, and the disconnect-as-failure signal: closing a
+     worker's socket makes pending calls raise WorkerLost and poll_dead
+     report the rank, with ``strict=False`` returning the survivors'
+     replies instead.
+"""
+import socket
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import elect_writer
+from repro.core.monitor import HeartbeatConfig, HeartbeatTracker
+from repro.runtime.coordination import (CoordinatorServer, DataServer,
+                                        WorkerChannel, WorkerLost, data_call,
+                                        pack_batches, pack_tree, recv_msg,
+                                        send_msg, unpack_batches, unpack_tree)
+
+
+# ----------------------------------------------------------------------
+# 1. Wire format
+# ----------------------------------------------------------------------
+def test_framing_roundtrip_header_and_blobs():
+    a, b = socket.socketpair()
+    try:
+        blobs = [b"", b"x" * 3, np.arange(7, dtype=np.float32).tobytes()]
+        send_msg(a, {"type": "t", "k": [1, "two"]}, blobs)
+        send_msg(a, {"type": "empty"})
+        h1, b1 = recv_msg(b)
+        h2, b2 = recv_msg(b)
+        assert h1 == {"type": "t", "k": [1, "two"]} and b1 == blobs
+        assert h2 == {"type": "empty"} and b2 == []
+    finally:
+        a.close()
+        b.close()
+
+
+def test_framing_eof_raises_connection_error():
+    a, b = socket.socketpair()
+    send_msg(a, {"type": "t"})
+    a.close()
+    h, _ = recv_msg(b)
+    assert h["type"] == "t"
+    with pytest.raises(ConnectionError):
+        recv_msg(b)
+    b.close()
+
+
+def test_pack_tree_roundtrips_bitwise():
+    tree = {"p": {"w": np.linspace(0, 1, 12, dtype=np.float32).reshape(3, 4),
+                  "b": np.arange(3, dtype=np.int32)},
+            "m": {"w": np.full((3, 4), np.pi, np.float32),
+                  "b": np.zeros(3, np.float32)}}
+    spec, blobs = pack_tree(tree)
+    out = unpack_tree(tree, spec, blobs)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert np.asarray(x).tobytes() == np.asarray(y).tobytes()
+        assert np.asarray(x).dtype == np.asarray(y).dtype
+
+
+def test_unpack_tree_rejects_structure_mismatch():
+    tree = {"a": np.zeros(2, np.float32), "b": np.ones(2, np.float32)}
+    spec, blobs = pack_tree(tree)
+    with pytest.raises(ValueError):
+        unpack_tree({"a": tree["a"], "c": tree["b"]}, spec, blobs)
+    with pytest.raises(ValueError):
+        unpack_tree({"a": tree["a"]}, spec, blobs)
+
+
+def test_pack_batches_roundtrip():
+    per_pipeline = [
+        [{"tokens": np.arange(8, dtype=np.int32).reshape(2, 4),
+          "labels": np.ones((2, 4), np.int32)} for _ in range(3)],
+        [{"tokens": np.zeros((2, 4), np.int32),
+          "labels": np.full((2, 4), 7, np.int32)}],
+    ]
+    spec, blobs = pack_batches(per_pipeline)
+    out = unpack_batches(spec, blobs)
+    assert len(out) == 2 and [len(p) for p in out] == [3, 1]
+    for mbs_in, mbs_out in zip(per_pipeline, out):
+        for mi, mo in zip(mbs_in, mbs_out):
+            assert sorted(mi) == sorted(mo)
+            for k in mi:
+                np.testing.assert_array_equal(mi[k], mo[k])
+
+
+# ----------------------------------------------------------------------
+# 2. Heartbeat state machine (injected clock)
+# ----------------------------------------------------------------------
+def _tracker():
+    clock = {"t": 0.0}
+    cfg = HeartbeatConfig(interval=0.5, timeout=3.0, backoff=1.0)
+    return HeartbeatTracker(cfg, now_fn=lambda: clock["t"]), clock, cfg
+
+
+def test_heartbeat_alive_suspect_dead_thresholds():
+    tr, clock, cfg = _tracker()
+    tr.register("w0")
+    assert cfg.dead_after == 6.0
+    clock["t"] = 3.0
+    assert tr.status("w0") == HeartbeatTracker.ALIVE     # silence == timeout
+    clock["t"] = 3.01
+    assert tr.status("w0") == HeartbeatTracker.SUSPECT
+    clock["t"] = 6.0
+    assert tr.status("w0") == HeartbeatTracker.SUSPECT   # == dead_after
+    clock["t"] = 6.01
+    assert tr.status("w0") == HeartbeatTracker.DEAD
+
+
+def test_heartbeat_beat_resets_silence():
+    tr, clock, _ = _tracker()
+    tr.register("w0")
+    clock["t"] = 2.9
+    assert tr.beat("w0")
+    clock["t"] = 5.8                        # 2.9s of silence since beat
+    assert tr.status("w0") == HeartbeatTracker.ALIVE
+
+
+def test_heartbeat_poll_reports_each_death_once_and_fences():
+    tr, clock, _ = _tracker()
+    tr.register("w0")
+    tr.register("w1")
+    clock["t"] = 1.0
+    tr.beat("w1")
+    clock["t"] = 6.5                        # w0 silent 6.5s, w1 silent 5.5s
+    assert tr.poll() == ["w0"]
+    assert tr.poll() == []                  # reported exactly once
+    assert tr.beat("w0") is False           # fenced: beat discarded
+    assert tr.status("w0") == HeartbeatTracker.DEAD
+    clock["t"] = 7.2                        # w1 now past dead_after too
+    assert tr.poll() == ["w1"]
+    assert tr.alive() == []
+
+
+def test_heartbeat_mark_dead_is_instant_and_sticky():
+    tr, clock, _ = _tracker()
+    tr.register("w0")
+    tr.mark_dead("w0")                      # socket EOF path: no timeout
+    assert tr.status("w0") == HeartbeatTracker.DEAD
+    assert tr.beat("w0") is False
+    assert tr.poll() == ["w0"]
+
+
+def test_elect_writer_is_deterministic_min():
+    assert elect_writer(["proc2", "proc0", "proc1"]) == "proc0"
+    assert elect_writer(["proc1"]) == "proc1"
+    with pytest.raises(ValueError):
+        elect_writer([])
+
+
+# ----------------------------------------------------------------------
+# 3. RPC over real sockets (threaded workers)
+# ----------------------------------------------------------------------
+class _ThreadWorker:
+    """A WorkerChannel served from a thread — the coordinator cannot
+    tell it apart from a real subprocess."""
+
+    def __init__(self, addr, rank, handlers, beat_interval=0.05):
+        self.channel = WorkerChannel(addr, rank, hello={"tag": f"w{rank}"},
+                                     beat_interval=beat_interval)
+        self.thread = threading.Thread(
+            target=self.channel.serve, args=(handlers,), daemon=True)
+        self.thread.start()
+
+
+def _echo_handlers(rank):
+    def echo(header, blobs):
+        return {"rank": rank, "x": header.get("x")}, [b + b"!" for b in blobs]
+
+    def boom(header, blobs):
+        raise RuntimeError(f"boom from {rank}")
+
+    return {"echo": echo, "boom": boom}
+
+
+@pytest.fixture
+def cluster():
+    server = CoordinatorServer(2, HeartbeatConfig(interval=0.05,
+                                                  timeout=0.5, backoff=1.0))
+    workers = [_ThreadWorker(server.addr, r, _echo_handlers(r))
+               for r in range(2)]
+    hellos = server.accept_workers(timeout=10)
+    try:
+        yield server, workers, hellos
+    finally:
+        for w in workers:
+            w.channel.close()
+        server.close()
+
+
+def test_rpc_call_and_broadcast(cluster):
+    server, _, hellos = cluster
+    assert {r: h["tag"] for r, h in hellos.items()} == {0: "w0", 1: "w1"}
+    h, blobs = server.call(1, {"type": "echo", "x": 5}, [b"ab"], timeout=10)
+    assert (h["rank"], h["x"], blobs) == (1, 5, [b"ab!"])
+    replies = server.broadcast_call({"type": "echo", "x": 9}, timeout=10)
+    assert {r: h["rank"] for r, (h, _) in replies.items()} == {0: 0, 1: 1}
+
+
+def test_rpc_multi_call_per_rank_payloads(cluster):
+    server, _, _ = cluster
+    replies = server.multi_call(
+        {0: ({"type": "echo", "x": "a"}, [b"0"]),
+         1: ({"type": "echo", "x": "b"}, [b"1"])}, timeout=10)
+    assert replies[0][0]["x"] == "a" and replies[1][0]["x"] == "b"
+    assert replies[0][1] == [b"0!"] and replies[1][1] == [b"1!"]
+
+
+def test_rpc_remote_exception_carries_traceback(cluster):
+    server, _, _ = cluster
+    with pytest.raises(RuntimeError, match="boom from 0"):
+        server.call(0, {"type": "boom"}, timeout=10)
+    # the channel survives a handler error
+    h, _ = server.call(0, {"type": "echo", "x": 1}, timeout=10)
+    assert h["rank"] == 0
+
+
+def test_rpc_disconnect_is_instant_failure(cluster):
+    server, workers, _ = cluster
+    workers[1].channel.close()              # EOF -> mark_dead, no timeout
+    with pytest.raises(WorkerLost) as e:
+        server.call(1, {"type": "echo"}, timeout=10)
+    assert e.value.ranks == [1]
+    assert server.poll_dead() == [1]
+    assert server.alive_ranks() == [0]
+    # strict broadcast names the corpse; lenient returns the survivors
+    with pytest.raises(WorkerLost):
+        server.broadcast_call({"type": "echo", "x": 2}, timeout=10)
+    replies = server.broadcast_call({"type": "echo", "x": 2}, timeout=10,
+                                    strict=False)
+    assert list(replies) == [0] and replies[0][0]["x"] == 2
+
+
+def test_data_server_roundtrip_and_error():
+    def handler(header, blobs):
+        if header.get("x") == "bad":
+            raise ValueError("nope")
+        return {"ok": True}, [blobs[0] * 2]
+
+    srv = DataServer(handler)
+    try:
+        h, blobs = data_call(srv.addr, {"type": "get", "x": 1}, [b"ab"])
+        assert h["ok"] and blobs == [b"abab"]
+        with pytest.raises(RuntimeError, match="nope"):
+            data_call(srv.addr, {"type": "get", "x": "bad"}, [b""])
+    finally:
+        srv.close()

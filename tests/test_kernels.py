@@ -393,8 +393,13 @@ def test_backend_signature_gating():
         assert not ops.kernel_lowers(kind, "cpu"), kind
     sig = ops.backend_signature()
     backend = jax.default_backend()
-    assert sig == (backend, ops.lowering_plan(backend))
-    assert dict(sig[1]) == {k: ops.kernel_lowers(k, backend)
+    # (backend, process topology, per-kind plan): the topology leg keeps
+    # single- and multi-process compilations of the same template from
+    # colliding in a shared cache
+    assert sig == (backend, ops.process_topology(),
+                   ops.lowering_plan(backend))
+    assert sig[1][:2] == (jax.process_count(), jax.process_index())
+    assert dict(sig[2]) == {k: ops.kernel_lowers(k, backend)
                             for k in ops.KERNEL_KINDS}
 
 
